@@ -1,0 +1,219 @@
+"""Benchmark harness — one section per paper result/figure + kernel/serving
+microbenches and the roofline aggregation.
+
+  PYTHONPATH=src python -m benchmarks.run [--only SECTION]
+
+Sections
+  ab_lift            paper §IV: A/B lift table (reads experiments/ab_report.json)
+  latency_ablation   engagement vs feature staleness (same report)
+  injection_overhead paper §III-B: history_merge op throughput
+  serving_phases     prefill vs inject vs decode cost (O(suffix) claim)
+  kernel_micro       Pallas-kernel oracle timings (XLA path on CPU)
+  roofline           aggregate dry-run JSONs into the §Roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _timeit(fn, *args, n=20, warmup=3):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+# ----------------------------------------------------------------------
+def bench_ab_lift():
+    print("\n== ab_lift (paper §IV: engagement lift table) ==")
+    path = os.path.join(ROOT, "experiments", "ab_report.json")
+    if not os.path.exists(path):
+        print("  [skip] run examples/ab_experiment.py first")
+        return
+    for tag, fname in (("regime A (intent drift)", "ab_report.json"),
+                       ("regime B (trust bias)", "ab_report_regimeB.json")):
+        path = os.path.join(ROOT, "experiments", fname)
+        if not os.path.exists(path):
+            continue
+        rep = json.load(open(path))
+        ctrl = rep["arms"]["control"]["ctr"]
+        print(f"  -- {tag} --")
+        print(f"  {'arm':14s} {'ctr':>8s} {'lift%':>8s} {'p':>8s} sig")
+        print(f"  {'control':14s} {ctrl:8.4f} {'--':>8s} {'--':>8s}")
+        for name, t in rep["tests"].items():
+            arm = name.replace("_vs_control", "")
+            if arm.startswith("stale_"):
+                continue
+            print(f"  {arm:14s} {rep['arms'][arm]['ctr']:8.4f} "
+                  f"{t['lift']*100:+8.2f} {t['p_t']:8.4f} "
+                  f"{'YES' if t['significant'] else 'no'}")
+
+
+def bench_latency_ablation():
+    print("\n== latency_ablation (engagement vs feature staleness) ==")
+    path = os.path.join(ROOT, "experiments", "ab_report.json")
+    if not os.path.exists(path):
+        print("  [skip] run examples/ab_experiment.py --latency first")
+        return
+    rep = json.load(open(path))
+    rows = [(n, a) for n, a in rep["arms"].items() if n.startswith("stale_")]
+    if not rows:
+        print("  [skip] no latency arms in the report (use --latency)")
+        return
+    print(f"  {'staleness':>12s} {'ctr':>8s}")
+    print(f"  {'24h batch':>12s} {rep['arms']['control']['ctr']:8.4f}")
+    for n, a in sorted(rows, key=lambda r: -int(r[0].split('_')[1][:-1])):
+        lam = int(n.split("_")[1][:-1])
+        print(f"  {lam:>11d}s {a['ctr']:8.4f}")
+    print(f"  {'inject(rt)':>12s} {rep['arms']['treatment']['ctr']:8.4f}")
+
+
+# ----------------------------------------------------------------------
+def bench_injection_overhead():
+    print("\n== injection_overhead (history_merge at serving shapes) ==")
+    from repro.kernels.history_merge.ops import history_merge
+    rng = np.random.RandomState(0)
+    print(f"  {'batch':>6s} {'L_hist':>7s} {'L_rt':>5s} {'K':>4s} "
+          f"{'us/req (xla)':>13s}")
+    for b, lb, lr, k in [(64, 64, 16, 64), (256, 64, 16, 64),
+                         (256, 256, 32, 256), (1024, 64, 16, 64)]:
+        args = (rng.randint(0, 5000, (b, lb)).astype(np.int32),
+                rng.randint(0, 10**6, (b, lb)).astype(np.int32),
+                np.ones((b, lb), np.int32),
+                rng.randint(0, 5000, (b, lr)).astype(np.int32),
+                rng.randint(10**6, 2 * 10**6, (b, lr)).astype(np.int32),
+                np.ones((b, lr), np.int32))
+        jargs = [jnp.asarray(a) for a in args]
+        dt = _timeit(lambda *a: history_merge(*a, out_len=k, impl="xla"),
+                     *jargs, n=10)
+        print(f"  {b:6d} {lb:7d} {lr:5d} {k:4d} {dt / b * 1e6:13.2f}")
+
+
+def bench_serving_phases():
+    print("\n== serving_phases (inject is O(suffix), not O(history)) ==")
+    from repro.configs.base import get_config, reduced
+    from repro.models.model import init_params
+    from repro.serving.engine import ServingConfig, ServingEngine
+    for arch in ("llama3.2-1b", "mamba2-780m"):
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        eng = ServingEngine(cfg, params, ServingConfig(
+            max_batch=8, prefill_len=512, inject_len=16, cache_capacity=1024))
+        rng = np.random.RandomState(0)
+        hists = [list(rng.randint(1, cfg.vocab_size, 500)) for _ in range(8)]
+        toks, valid = eng.pad_tokens(hists, 512)
+        t_prefill = _timeit(eng.prefill, toks, valid, n=5)
+        state = eng.prefill(toks, valid)
+        fresh = [list(rng.randint(1, cfg.vocab_size, 8)) for _ in range(8)]
+        stoks, svalid = eng.pad_tokens(fresh, 16, align="left")
+        t_inject = _timeit(lambda s, sv: eng.inject(state, s, sv),
+                           stoks, svalid, n=5)
+        dec = eng.finalize(eng.inject(state, stoks, svalid))
+        tok = np.array([[1]] * 8, np.int32)
+        t_decode = _timeit(lambda t: eng.decode(dec, t)[0], tok, n=5)
+        print(f"  {arch:14s} prefill(512)={t_prefill*1e3:7.1f}ms "
+              f"inject(16)={t_inject*1e3:6.1f}ms "
+              f"decode(1)={t_decode*1e3:6.1f}ms "
+              f"ratio inject/prefill={t_inject/t_prefill:.2f}")
+
+
+def bench_kernel_micro():
+    print("\n== kernel_micro (oracle-path timings on CPU; Pallas targets TPU) ==")
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.models.ssm import ssd_chunked
+    from repro.kernels.ssd_scan.ref import ssd_ref_sequential
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (2, 8, 1024, 64))
+    k = jax.random.normal(k2, (2, 2, 1024, 64))
+    v = jax.random.normal(k3, (2, 2, 1024, 64))
+    ref = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    print(f"  attention_ref  1k seq: {_timeit(ref, q, k, v, n=5)*1e3:8.1f} ms")
+
+    x = jax.random.normal(k1, (2, 1024, 8, 64)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(k2, (2, 1024, 8)) - 2)
+    A = -jnp.exp(jax.random.normal(k3, (8,)) * 0.3)
+    B = jax.random.normal(k1, (2, 1024, 128)) * 0.3
+    C = jax.random.normal(k2, (2, 1024, 128)) * 0.3
+    D = jnp.ones((8,))
+    chunked = jax.jit(lambda *a: ssd_chunked(*a, chunk=256))
+    seq = jax.jit(ssd_ref_sequential)
+    t_c = _timeit(chunked, x, dt, A, B, C, D, n=5)
+    t_s = _timeit(seq, x, dt, A, B, C, D, n=5)
+    print(f"  ssd chunked vs sequential 1k: {t_c*1e3:7.1f} ms vs "
+          f"{t_s*1e3:7.1f} ms (speedup {t_s/t_c:.1f}x — the SSD trick)")
+
+
+# ----------------------------------------------------------------------
+def bench_roofline():
+    print("\n== roofline (dry-run artifacts; baseline -> optimized §Perf) ==")
+    files = sorted(glob.glob(os.path.join(ROOT, "experiments", "dryrun",
+                                          "*.json")))
+    if not files:
+        print("  [skip] run python -m repro.launch.dryrun --all first")
+        return
+    print(f"  {'arch':21s} {'shape':11s} {'mesh':16s} {'pkGiB':>6s} "
+          f"{'compute':>8s} {'memory base->opt':>19s} "
+          f"{'collective base->opt':>21s}")
+    tot = [0.0, 0.0, 0.0, 0.0]
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        opt_f = f.replace(os.sep + "dryrun" + os.sep,
+                          os.sep + "dryrun_opt" + os.sep)
+        to = (json.load(open(opt_f))["roofline"]
+              if os.path.exists(opt_f) else t)
+        if r["mesh"] == "pod_16x16":
+            tot[0] += t["memory_s"]; tot[1] += to["memory_s"]
+            tot[2] += t["collective_s"]; tot[3] += to["collective_s"]
+        print(f"  {r['arch']:21s} {r['shape']:11s} {r['mesh']:16s} "
+              f"{r['memory']['peak_bytes_per_device']/2**30:6.2f} "
+              f"{to['compute_s']:8.2e} "
+              f"{t['memory_s']:9.2e}->{to['memory_s']:9.2e} "
+              f"{t['collective_s']:10.2e}->{to['collective_s']:10.2e}")
+    if tot[1] and tot[3]:
+        print(f"  fleet (single-pod): memory {tot[0]:.0f}->{tot[1]:.0f}s "
+              f"({tot[0]/tot[1]:.2f}x)  collective {tot[2]:.0f}->{tot[3]:.0f}s "
+              f"({tot[2]/tot[3]:.2f}x)")
+
+
+SECTIONS = {
+    "ab_lift": bench_ab_lift,
+    "latency_ablation": bench_latency_ablation,
+    "injection_overhead": bench_injection_overhead,
+    "serving_phases": bench_serving_phases,
+    "kernel_micro": bench_kernel_micro,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    args = ap.parse_args()
+    for name, fn in SECTIONS.items():
+        if args.only and name != args.only:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: the paper's inference-time feature injection in 60 lines.
+
+Builds the two feature stores, wires the injector, and shows a user whose
+morning thriller binge changes their recommendations *within the day* —
+without touching the batch-trained model (paper §III-B).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BatchFeatureStore, FeatureInjector, FeatureStoreConfig,
+                        InjectionConfig, PipelineConfig, RecommenderPlatform,
+                        RealtimeConfig, RealtimeFeatureService)
+from repro.core.ab import default_sim_model
+from repro.models.model import init_params
+
+DAY = 86400
+N_ITEMS = 500
+
+# --- assemble the platform (one A/B arm) ------------------------------
+model_cfg = default_sim_model(N_ITEMS)
+params = init_params(model_cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+store = BatchFeatureStore(FeatureStoreConfig(n_users=2, feature_len=16))
+rts = RealtimeFeatureService(RealtimeConfig(n_users=2, buffer_len=8,
+                                            ingest_latency=30))
+
+def make_arm(policy):
+    inj = FeatureInjector(InjectionConfig(policy=policy, feature_len=16),
+                          store, rts)
+    pcfg = PipelineConfig(n_items=N_ITEMS, slate_size=5, serve_batch=2)
+    pop = np.full((N_ITEMS,), 1.0 / N_ITEMS)
+    return RecommenderPlatform(pcfg, model_cfg, params, inj, pop,
+                               run_batch_jobs=False)
+
+control = make_arm("batch")     # stale daily features (paper §III-A)
+treatment = make_arm("inject")  # inference-time injection (paper §III-B)
+
+# --- user 0 watched comedies yesterday --------------------------------
+for ts, item in [(1000, 10), (2000, 11), (3000, 12)]:
+    store.append(0, item, ts)
+store.run_snapshot(DAY)  # the midnight batch job
+
+# --- this morning they binged thrillers (items 400..402) ---------------
+for i, item in enumerate([400, 401, 402]):
+    rts.ingest(0, item, ts=DAY + 600 + i * 300)
+
+# --- serve at noon ------------------------------------------------------
+users, now = np.array([0]), np.array([DAY + 7200])
+print("control   slate (stale batch features):", control.serve(users, now)[0])
+print("treatment slate (injected fresh events):", treatment.serve(users, now)[0])
+print("\nThe treatment arm merged", treatment.injector.realtime.events_ingested,
+      "fresh events at inference time — zero model retraining.")

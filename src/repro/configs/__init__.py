@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, get_config, list_configs, reduced,
+    register, pad_vocab,
+)
+from repro.configs.shapes import InputShape, SHAPES, get_shape  # noqa: F401

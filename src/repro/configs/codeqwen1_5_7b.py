@@ -1,0 +1,2 @@
+"""Config module for --arch selection (see archs.py for the definition)."""
+from repro.configs.archs import CODEQWEN_7B as CONFIG  # noqa: F401

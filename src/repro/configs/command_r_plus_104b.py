@@ -1,0 +1,2 @@
+"""Config module for --arch selection (see archs.py for the definition)."""
+from repro.configs.archs import COMMAND_R_PLUS as CONFIG  # noqa: F401

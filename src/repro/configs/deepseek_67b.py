@@ -1,0 +1,2 @@
+"""Config module for --arch selection (see archs.py for the definition)."""
+from repro.configs.archs import DEEPSEEK_67B as CONFIG  # noqa: F401

@@ -1,0 +1,2 @@
+"""Config module for --arch selection (see archs.py for the definition)."""
+from repro.configs.archs import MAMBA2_780M as CONFIG  # noqa: F401

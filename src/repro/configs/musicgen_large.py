@@ -1,0 +1,2 @@
+"""Config module for --arch selection (see archs.py for the definition)."""
+from repro.configs.archs import MUSICGEN_LARGE as CONFIG  # noqa: F401

@@ -1,0 +1,16 @@
+"""The paper's contribution: inference-time feature injection (ITFI).
+
+  feature_store  — batch "daily job" feature snapshots (§III-A)
+  realtime       — streaming real-time feature service (§III-B, Fig. 2)
+  injection      — the merge + inject-as-if-batch operator (§III-B)
+  pipeline       — two-stage recommend: retrieval -> ranking (§III)
+  metrics        — engagement metrics + paired significance tests (§IV)
+  ab             — the A/B experiment harness reproducing §IV
+"""
+from repro.core.feature_store import (  # noqa: F401
+    BatchFeatureStore, FeatureStoreConfig)
+from repro.core.injection import FeatureInjector, InjectionConfig  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    PipelineConfig, RecommenderPlatform)
+from repro.core.realtime import (  # noqa: F401
+    RealtimeConfig, RealtimeFeatureService)

@@ -1,0 +1,137 @@
+"""Batch feature store — the paper's "daily job" (§III-A).
+
+Materializes per-user fixed-length watch-history features from the event log
+on a fixed cadence (default: midnight). Between snapshots the features are
+served *statically* — exactly the staleness the paper's injection closes.
+
+Features are model-ready padded arrays:
+
+    items (U, K) int32   — watch history, right-aligned ascending time
+    ts    (U, K) int32   — event timestamps (same layout)
+    valid (U, K) int32   — 1 where a real event occupies the slot
+
+``K = feature_len``. The store keeps every snapshot it has produced
+(versioned by snapshot timestamp) so the latency ablation can serve
+arbitrarily stale feature generations.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+DAY = 86400
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureStoreConfig:
+    n_users: int
+    feature_len: int = 64
+    snapshot_period: int = DAY      # "daily" job cadence
+    snapshot_offset: int = 0        # job runs at midnight by default
+    window: int = 30 * DAY          # history lookback of the daily job
+
+
+class BatchFeatureStore:
+    """Append-only event log + periodic snapshot materialization."""
+
+    def __init__(self, cfg: FeatureStoreConfig):
+        self.cfg = cfg
+        # per-user chronological event log: lists of (ts, item)
+        self._log: List[List[Tuple[int, int]]] = [[] for _ in range(cfg.n_users)]
+        # snapshot_ts -> (items, ts, valid) arrays
+        self._snapshots: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        self._snapshot_times: List[int] = []
+
+    # ------------------------------------------------------------------
+    # Ingest (the offline log collector — sees everything, eventually)
+    # ------------------------------------------------------------------
+    def append(self, user: int, item: int, ts: int) -> None:
+        self._log[user].append((ts, item))
+
+    def append_events(self, events) -> None:
+        for ev in events:
+            self.append(ev.user, ev.item, ev.ts)
+
+    # ------------------------------------------------------------------
+    # The daily job
+    # ------------------------------------------------------------------
+    def run_snapshot(self, snapshot_ts: int) -> None:
+        """Materialize features from all events with ts < snapshot_ts."""
+        c = self.cfg
+        k = c.feature_len
+        items = np.zeros((c.n_users, k), np.int32)
+        ts_arr = np.zeros((c.n_users, k), np.int32)
+        valid = np.zeros((c.n_users, k), np.int32)
+        lo = snapshot_ts - c.window
+        for u in range(c.n_users):
+            evs = [e for e in self._log[u] if lo <= e[0] < snapshot_ts]
+            evs.sort()
+            evs = evs[-k:]
+            n = len(evs)
+            if n:
+                items[u, k - n:] = [e[1] for e in evs]
+                ts_arr[u, k - n:] = [e[0] for e in evs]
+                valid[u, k - n:] = 1
+        self._snapshots[snapshot_ts] = (items, ts_arr, valid)
+        bisect.insort(self._snapshot_times, snapshot_ts)
+
+    def maybe_run_due_snapshots(self, now: int) -> None:
+        """Run any snapshot whose scheduled time has passed (idempotent)."""
+        c = self.cfg
+        t = ((now - c.snapshot_offset) // c.snapshot_period) * c.snapshot_period \
+            + c.snapshot_offset
+        while t > (self._snapshot_times[-1] if self._snapshot_times else -1):
+            due = (self._snapshot_times[-1] + c.snapshot_period
+                   if self._snapshot_times else t)
+            if due > now:
+                break
+            self.run_snapshot(due)
+
+    # ------------------------------------------------------------------
+    # Serving reads
+    # ------------------------------------------------------------------
+    def latest_snapshot_ts(self, now: int) -> Optional[int]:
+        i = bisect.bisect_right(self._snapshot_times, now) - 1
+        return self._snapshot_times[i] if i >= 0 else None
+
+    def lookup(self, users: np.ndarray, now: int,
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batch features as served at wall-time ``now`` (latest snapshot
+        at or before now). Zero features if no snapshot exists yet."""
+        snap = self.latest_snapshot_ts(now)
+        k = self.cfg.feature_len
+        if snap is None:
+            z = np.zeros((len(users), k), np.int32)
+            return z, z.copy(), z.copy()
+        items, ts_arr, valid = self._snapshots[snap]
+        return items[users], ts_arr[users], valid[users]
+
+    def lookup_at_cutoff(self, users: np.ndarray, cutoff: int,
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Features computed directly with an arbitrary cutoff (used by the
+        training-data builder and the latency ablation — it emulates a
+        feature pipeline whose refresh latency places the cutoff at
+        ``cutoff`` rather than last midnight)."""
+        c = self.cfg
+        k = c.feature_len
+        items = np.zeros((len(users), k), np.int32)
+        ts_arr = np.zeros((len(users), k), np.int32)
+        valid = np.zeros((len(users), k), np.int32)
+        lo = cutoff - c.window
+        for j, u in enumerate(users):
+            evs = [e for e in self._log[u] if lo <= e[0] < cutoff]
+            evs.sort()
+            evs = evs[-k:]
+            n = len(evs)
+            if n:
+                items[j, k - n:] = [e[1] for e in evs]
+                ts_arr[j, k - n:] = [e[0] for e in evs]
+                valid[j, k - n:] = 1
+        return items, ts_arr, valid
+
+    # ------------------------------------------------------------------
+    def user_events(self, user: int) -> List[Tuple[int, int]]:
+        return sorted(self._log[user])

@@ -1,0 +1,163 @@
+"""Two-stage recommendation pipeline (paper §III, Fig. 1/2).
+
+Stage 1 — candidate retrieval:
+  * **primary recaller**: recency-weighted mean of the user's watch-history
+    item embeddings, scored against all item embeddings ("retrieve a set of
+    similar or relevant items"). Because it reads the *injected* features in
+    the treatment arm, it "is enhanced to incorporate the user's recent
+    watch history" exactly as §III-B-1 describes — with zero code changes.
+  * **auxiliary popularity recaller** ("used to diversify the candidate
+    pool") — unchanged across arms, as in the paper.
+
+Stage 2 — ranking: the batch-trained sequential ranker (a decoder-only
+model over item-id tokens, ``configs/itfi_ranker``) consumes the same
+feature history and scores the candidate union; top ``slate_size`` wins.
+Already-watched history items are excluded from the slate.
+
+Item-id ↔ token mapping: item i ↦ token i+1; token 0 is padding.
+
+The whole serve path for a request batch is ONE jit'd call
+(``_serve_jit``): feature tokens in, slate item-ids out — the shape every
+arm shares, so A/B timing is apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.injection import FeatureInjector
+from repro.models.model import forward
+
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    n_items: int
+    slate_size: int = 10
+    n_candidates: int = 128        # retrieval fan-in to the ranker
+    recall_primary: int = 96       # primary recaller quota
+    recall_popular: int = 32       # popularity recaller quota
+    recency_halflife: int = 8      # events; recency weight 0.5**(age/halflife)
+    serve_batch: int = 256         # static request-batch shape (padded)
+
+
+def items_to_tokens(items: np.ndarray, valid: np.ndarray) -> np.ndarray:
+    """item ids -> model tokens (shift by 1; pad slots -> token 0)."""
+    return np.where(valid > 0, items + 1, 0).astype(np.int32)
+
+
+# ----------------------------------------------------------------------
+# The jit'd serve core
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "pcfg"))
+def _serve_core(params, tokens, valid, pop_prior, *, cfg: ModelConfig,
+                pcfg: PipelineConfig):
+    """tokens/valid (B,K); pop_prior (V_items,) log-popularity.
+
+    Returns (slate_items (B, slate), cand_items (B, C)) as item ids.
+    """
+    b, k = tokens.shape
+    n_items = pcfg.n_items
+    table = params["embed"]["table"]  # (Vp, d)
+
+    # ---- stage 1: retrieval ------------------------------------------
+    # recency-weighted mean embedding of history tokens
+    age = (k - 1 - jnp.arange(k, dtype=jnp.float32))[None, :]  # (1,K)
+    w = jnp.where(valid > 0, 0.5 ** (age / pcfg.recency_halflife), 0.0)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    hist_emb = jnp.einsum("bk,bkd->bd", w.astype(table.dtype), table[tokens])
+    item_emb = table[1:n_items + 1]  # (V_items, d)
+    sim = jnp.einsum("bd,vd->bv", hist_emb, item_emb).astype(jnp.float32)
+
+    # exclude already-watched items from retrieval & ranking
+    # (+2: slot 0 = pad token, last slot absorbs the SEP token harmlessly)
+    watched = jnp.zeros((b, n_items + 2), bool)
+    watched = watched.at[jnp.arange(b)[:, None], tokens].set(valid > 0)
+    watched = watched[:, 1:n_items + 1]  # item-id indexed
+    sim = jnp.where(watched, NEG_INF, sim)
+
+    _, prim = jax.lax.top_k(sim, pcfg.recall_primary)          # (B, M1)
+    pop = jnp.where(watched, NEG_INF, pop_prior[None, :])
+    _, popc = jax.lax.top_k(pop, pcfg.recall_popular)          # (B, M2)
+    cand = jnp.concatenate([prim, popc], axis=1)               # item idx 0-based
+
+    # ---- stage 2: ranking --------------------------------------------
+    logits, _ = forward(params, cfg, tokens, valid=(valid > 0))
+    last = logits[:, -1, :]  # (B, Vp) next-item distribution
+    cand_tok = cand + 1
+    cand_scores = jnp.take_along_axis(last, cand_tok, axis=1)  # (B, C)
+    # dedup candidates (popularity quota may collide with primary):
+    # mask any candidate equal to an earlier candidate in the row.
+    c = cand.shape[1]
+    eq_earlier = (cand[:, :, None] == cand[:, None, :]) & (
+        jnp.arange(c)[None, :, None] > jnp.arange(c)[None, None, :])
+    dup = eq_earlier.any(-1)
+    cand_scores = jnp.where(dup, NEG_INF, cand_scores)
+    _, top_idx = jax.lax.top_k(cand_scores, pcfg.slate_size)
+    slate = jnp.take_along_axis(cand, top_idx, axis=1)
+    return slate, cand
+
+
+# ----------------------------------------------------------------------
+# The platform: injector + pipeline + model = one A/B arm
+# ----------------------------------------------------------------------
+
+class RecommenderPlatform:
+    """Callable platform for the simulator: serve(users, tss) -> slates."""
+
+    def __init__(self, pcfg: PipelineConfig, model_cfg: ModelConfig, params,
+                 injector: FeatureInjector, popularity: np.ndarray,
+                 run_batch_jobs: bool = True, mode: str = "plain"):
+        self.pcfg = pcfg
+        self.model_cfg = model_cfg
+        self.params = params
+        self.injector = injector
+        self.pop_prior = jnp.asarray(
+            np.log(popularity * len(popularity) + 1e-9), jnp.float32)
+        self.run_batch_jobs = run_batch_jobs
+        self.mode = mode  # "plain" | "consistent" (paper §IV variant)
+        self.serve_calls = 0
+
+    # -- event plumbing -------------------------------------------------
+    def observe(self, ev) -> None:
+        """Platform-side event hooks: offline log + realtime stream."""
+        self.injector.batch.append(ev.user, ev.item, ev.ts)
+        if self.injector.realtime is not None:
+            self.injector.realtime.ingest(ev.user, ev.item, ev.ts)
+
+    # -- serving ---------------------------------------------------------
+    def serve(self, users: np.ndarray, tss: np.ndarray) -> np.ndarray:
+        now = int(tss.max())
+        if self.run_batch_jobs:
+            self.injector.batch.maybe_run_due_snapshots(now)
+        if self.mode == "consistent":
+            # paper §IV variant: explicit auxiliary recent-watch features,
+            # identical construction at training and inference.
+            from repro.data.loader import serve_tokens_consistent
+            bf = self.injector.batch.lookup(users, now)
+            rf = self.injector.realtime.lookup(users, now)
+            tokens, valid = serve_tokens_consistent(
+                bf, rf, self.pcfg.n_items, self.injector.cfg.feature_len)
+            valid = valid.astype(np.int32)
+        else:
+            items, ts_arr, valid = self.injector.features(users, now)
+            tokens = items_to_tokens(items, valid)
+
+        n = len(users)
+        bpad = self.pcfg.serve_batch
+        if n < bpad:  # pad to the static batch shape
+            tokens = np.pad(tokens, ((0, bpad - n), (0, 0)))
+            valid = np.pad(valid, ((0, bpad - n), (0, 0)))
+        slate, _ = _serve_core(self.params, jnp.asarray(tokens),
+                               jnp.asarray(valid), self.pop_prior,
+                               cfg=self.model_cfg, pcfg=self.pcfg)
+        self.serve_calls += 1
+        return np.asarray(slate[:n])

@@ -1,0 +1,2 @@
+from repro.kernels.decode_attention.ops import decode_attention, ring_bias  # noqa: F401
+from repro.kernels.decode_attention.ref import decode_attention_ref  # noqa: F401

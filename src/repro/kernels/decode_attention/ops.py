@@ -1,0 +1,33 @@
+"""Jit'd wrapper for decode attention: model layout + ring-validity bias."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    NEG_INF, decode_attention_bhd)
+
+
+def ring_bias(pos: jnp.ndarray, capacity: int) -> jnp.ndarray:
+    """Additive mask for a ring cache: slot i valid iff i <= pos or the ring
+    has wrapped (pos >= capacity). pos (B,) int32 -> (B, capacity) f32."""
+    idx = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    valid = (idx <= pos[:, None]) | (pos[:, None] >= capacity)
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q (B,1,nq,hd); k/v cache (B,W,nkv,hd); pos (B,) -> (B,1,nq,hd)."""
+    b, one, nq, hd = q.shape
+    w = k_cache.shape[1]
+    qt = jnp.moveaxis(q, 1, 2)  # (B,nq,1,hd)
+    kt = jnp.moveaxis(k_cache, 1, 2)  # (B,nkv,W,hd)
+    vt = jnp.moveaxis(v_cache, 1, 2)
+    bias = ring_bias(pos, w)
+    out = decode_attention_bhd(qt, kt, vt, bias, block_k=block_k,
+                               interpret=interpret)
+    return jnp.moveaxis(out, 2, 1)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, bias, *, scale: float | None = None):
+    """q (B,nq,1,hd); k/v (B,nkv,W,hd); bias (B,W) -> (B,nq,1,hd)."""
+    b, nq, _, hd = q.shape
+    nkv = k.shape[1]
+    g = nq // nkv
+    if scale is None:
+        scale = hd ** -0.5
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vv.dtype), vv)

@@ -1,0 +1,2 @@
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401

@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention (prefill) kernel.
+
+Blockwise online-softmax attention with explicit VMEM tiling:
+
+* grid = (batch, q_heads, S/block_q, S/block_k); the K-block axis is the
+  fastest (sequential) grid dimension, so the (m, l, acc) online-softmax
+  state lives in VMEM scratch and persists across K steps.
+* Q block (block_q, head_dim) stays resident; K/V blocks stream through.
+* GQA is handled in the K/V index_map (query head h reads kv head
+  h * n_kv // n_q) — repeated KV heads are never materialized.
+* Causal and sliding-window masks are applied with block-level early-out:
+  fully-masked K blocks skip the matmul entirely (``pl.when``).
+
+Layouts are (batch, heads, seq, head_dim); block_q/block_k default to 128,
+MXU-aligned, and head_dim (64/128 across assigned archs) is the minor dim.
+VMEM working set per step ≈ (block_q + 2·block_k)·head_dim·2B +
+block_q·block_k·4B + acc (block_q·head_dim·4B) ≈ 0.3 MB at 128/128/128 —
+comfortably under the ~16 MB/core VMEM budget, leaving room for the
+compiler's double buffering of the K/V streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # block-level skip: causal => K block strictly after Q block is dead;
+    # sliding window => K block entirely left of the window is dead.
+    live = jnp.bool_(True)
+    if causal:
+        live &= k_start <= q_start + block_q - 1
+    if window > 0:
+        live &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]  # (bq, hd)
+        k = k_ref[0, 0]  # (bk, hd)
+        v = v_ref[0, 0]  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True, window: int = 0,
+                         scale: float | None = None, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False):
+    """q (B, nq, S, hd); k/v (B, nkv, S, hd); returns (B, nq, S, hd).
+
+    S must be divisible by block sizes (ops.py pads).
+    """
+    b, nq, s, hd = q.shape
+    nkv = k.shape[1]
+    assert nq % nkv == 0
+    g = nq // nkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    if scale is None:
+        scale = hd ** -0.5
+
+    grid = (b, nq, s // block_q, s // block_k)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, h, qi, ki, g=g: (bb, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, h, qi, ki, g=g: (bb, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nq, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

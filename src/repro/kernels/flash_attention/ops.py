@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Accepts the model's (B, S, heads, hd) layout, transposes to the kernel's
+(B, heads, S, hd), pads S up to the block size, and slices the pad off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.models.common import round_up
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q (B,S,nq,hd); k/v (B,S,nkv,hd) -> (B,S,nq,hd)."""
+    b, s, nq, hd = q.shape
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    sp = round_up(s, max(min(block_q, s), min(block_k, s)))
+    if sp != s:
+        pad = ((0, 0), (0, 0), (0, sp - s), (0, 0))
+        qt, kt, vt = jnp.pad(qt, pad), jnp.pad(kt, pad), jnp.pad(vt, pad)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return jnp.moveaxis(out[:, :, :s], 2, 1)

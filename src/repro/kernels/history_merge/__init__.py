@@ -1,0 +1,3 @@
+from repro.kernels.history_merge.ops import history_merge  # noqa: F401
+from repro.kernels.history_merge.ref import (  # noqa: F401
+    history_merge_python, history_merge_ref)

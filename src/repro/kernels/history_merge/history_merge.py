@@ -1,0 +1,86 @@
+"""Pallas TPU kernel for inference-time watch-history injection (paper §III-B).
+
+This is the per-request hot spot of the paper's technique: merge the user's
+*batch* watch history (daily snapshot, long window) with the *real-time*
+event buffer (seconds-fresh, short window) into one model-ready history —
+time-ordered, deduplicated by item (freshest occurrence wins, real-time
+beats batch on ties), truncated to the feature length K.
+
+TPU adaptation (DESIGN.md §2): no data-dependent shapes and no sort
+primitive. Both inputs arrive as fixed-size padded buffers with validity
+flags; the merge is reformulated as **pairwise rank computation**:
+
+  rank(i)  = #{ j valid, non-duplicate : j strictly fresher than i }
+  slot(i)  = K - 1 - rank(i)            (right-aligned, ascending time)
+  keep(i)  = valid(i) ∧ ¬dup(i) ∧ rank(i) < K
+
+over the concatenated N = L_batch + L_rt events — O(N²) boolean work on
+(N, N) tiles, fully vectorized (VPU), followed by a one-hot (N, K) scatter
+expressed as a masked integer reduction. N ≈ a few hundred, so N² ≈ 10⁵
+lane-ops per request — microseconds, vs. a host round-trip for a dynamic
+merge. Grid = (batch,); each step's working set is O(N² + N·K) int32/bool
+in VMEM (≈ 0.6 MB at N=320, K=256).
+
+Freshness total order: (ts, is_rt, buffer index) lexicographic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(bi_ref, bt_ref, bv_ref, ri_ref, rt_ref, rv_ref,
+                  oi_ref, ot_ref, ov_ref, *, lb: int, lr: int, k: int):
+    n = lb + lr
+    items = jnp.concatenate([bi_ref[0], ri_ref[0]])  # (N,)
+    ts = jnp.concatenate([bt_ref[0], rt_ref[0]])
+    valid = jnp.concatenate([bv_ref[0], rv_ref[0]]) > 0
+    is_rt = jax.lax.iota(jnp.int32, n) >= lb
+    idx = jax.lax.iota(jnp.int32, n)
+
+    # fresher(j, i): event j strictly fresher than event i (lexicographic)
+    ts_j, ts_i = ts[:, None], ts[None, :]
+    rt_j, rt_i = is_rt[:, None], is_rt[None, :]
+    ix_j, ix_i = idx[:, None], idx[None, :]
+    fresher = (ts_j > ts_i) | (
+        (ts_j == ts_i) & ((rt_j & ~rt_i) | ((rt_j == rt_i) & (ix_j > ix_i))))
+
+    valid_j = valid[:, None]
+    same_item = items[:, None] == items[None, :]
+    dup = jnp.any(valid_j & same_item & fresher, axis=0) | ~valid  # (N,)
+
+    alive_j = (valid & ~dup)[:, None]
+    rank = jnp.sum((alive_j & fresher).astype(jnp.int32), axis=0)  # (N,)
+    keep = valid & ~dup & (rank < k)
+    slot = k - 1 - rank  # right-aligned: rank 0 (freshest) -> slot K-1
+
+    # one-hot scatter as a masked reduction over N (no dynamic indexing)
+    slots = jax.lax.iota(jnp.int32, k)[None, :]  # (1, K)
+    onehot = keep[:, None] & (slot[:, None] == slots)  # (N, K)
+    oi_ref[0] = jnp.sum(jnp.where(onehot, items[:, None], 0), axis=0)
+    ot_ref[0] = jnp.sum(jnp.where(onehot, ts[:, None], 0), axis=0)
+    ov_ref[0] = jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def history_merge_pallas(batch_items, batch_ts, batch_valid,
+                         rt_items, rt_ts, rt_valid, *, out_len: int,
+                         interpret: bool = False):
+    """All inputs (B, L_batch) / (B, L_rt) int32. Returns
+    (items, ts, valid) each (B, out_len) int32, right-aligned ascending-time,
+    deduplicated by item id (freshest kept, real-time wins ties)."""
+    b, lb = batch_items.shape
+    lr = rt_items.shape[1]
+    k = out_len
+
+    row = lambda L: pl.BlockSpec((1, L), lambda bb: (bb, 0))
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, lb=lb, lr=lr, k=k),
+        grid=(b,),
+        in_specs=[row(lb), row(lb), row(lb), row(lr), row(lr), row(lr)],
+        out_specs=[row(k), row(k), row(k)],
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.int32)] * 3,
+        interpret=interpret,
+    )(batch_items, batch_ts, batch_valid, rt_items, rt_ts, rt_valid)

@@ -1,0 +1,25 @@
+"""Jit'd wrapper for history_merge with an impl switch.
+
+``impl``:
+  * "pallas"            — the TPU kernel (target)
+  * "pallas_interpret"  — kernel body interpreted on CPU (tests / this host)
+  * "xla"               — the jnp oracle (CPU-fast default for the A/B sim)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.history_merge.history_merge import history_merge_pallas
+from repro.kernels.history_merge.ref import history_merge_ref
+
+
+@functools.partial(jax.jit, static_argnames=("out_len", "impl"))
+def history_merge(batch_items, batch_ts, batch_valid, rt_items, rt_ts,
+                  rt_valid, *, out_len: int, impl: str = "xla"):
+    args = (batch_items, batch_ts, batch_valid, rt_items, rt_ts, rt_valid)
+    if impl == "xla":
+        return history_merge_ref(*args, out_len=out_len)
+    return history_merge_pallas(*args, out_len=out_len,
+                                interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,70 @@
+"""Oracles for history_merge: a pure-jnp version (argsort-based) and a
+plain-python version used as ground truth in hypothesis property tests."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def history_merge_ref(batch_items, batch_ts, batch_valid,
+                      rt_items, rt_ts, rt_valid, *, out_len: int):
+    """jnp oracle, same contract as the kernel (vectorized via argsort)."""
+    b, lb = batch_items.shape
+    lr = rt_items.shape[1]
+    n, k = lb + lr, out_len
+
+    items = jnp.concatenate([batch_items, rt_items], axis=1)
+    ts = jnp.concatenate([batch_ts, rt_ts], axis=1)
+    valid = jnp.concatenate([batch_valid, rt_valid], axis=1) > 0
+    is_rt = (jnp.arange(n) >= lb)[None, :].astype(jnp.int32)
+    idx = jnp.arange(n)[None, :]
+
+    ts_j, ts_i = ts[:, :, None], ts[:, None, :]
+    rt_j, rt_i = is_rt[:, :, None], is_rt[:, None, :]
+    ix_j, ix_i = idx[:, :, None], idx[:, None, :]
+    fresher = (ts_j > ts_i) | ((ts_j == ts_i) & (
+        ((rt_j > rt_i)) | ((rt_j == rt_i) & (ix_j > ix_i))))
+
+    dup = jnp.any(valid[:, :, None] & (items[:, :, None] == items[:, None, :])
+                  & fresher, axis=1) | ~valid
+    alive = valid & ~dup
+    rank = jnp.sum((alive[:, :, None] & fresher).astype(jnp.int32), axis=1)
+    keep = alive & (rank < k)
+    slot = k - 1 - rank
+
+    out_i = jnp.zeros((b, k), jnp.int32)
+    out_t = jnp.zeros((b, k), jnp.int32)
+    out_v = jnp.zeros((b, k), jnp.int32)
+    brow = jnp.arange(b)[:, None]
+    tgt = jnp.where(keep, slot, k)  # k = discard bin
+    out_i = jnp.concatenate([out_i, jnp.zeros((b, 1), jnp.int32)], 1
+                            ).at[brow, tgt].set(items).at[:, k].set(0)[:, :k]
+    out_t = jnp.concatenate([out_t, jnp.zeros((b, 1), jnp.int32)], 1
+                            ).at[brow, tgt].set(ts).at[:, k].set(0)[:, :k]
+    out_v = jnp.concatenate([out_v, jnp.zeros((b, 1), jnp.int32)], 1
+                            ).at[brow, tgt].set(1).at[:, k].set(0)[:, :k]
+    return out_i, out_t, out_v
+
+
+def history_merge_python(batch: List[Tuple[int, int]], rt: List[Tuple[int, int]],
+                         out_len: int) -> List[Tuple[int, int]]:
+    """Plain-python ground truth over (item, ts) event lists.
+
+    Returns up to out_len (item, ts) pairs, ascending freshness order
+    (the right-aligned valid suffix of the kernel output).
+    """
+    events = [(ts, 0, i, item) for i, (item, ts) in enumerate(batch)]
+    events += [(ts, 1, i, item) for i, (item, ts) in enumerate(rt)]
+    # freshest first: sort by (ts, is_rt, idx) descending
+    events.sort(key=lambda e: (e[0], e[1], e[2]), reverse=True)
+    seen, out = set(), []
+    for ts, _, _, item in events:
+        if item in seen:
+            continue
+        seen.add(item)
+        out.append((item, ts))
+        if len(out) == out_len:
+            break
+    return list(reversed(out))  # ascending time

@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_heads", "interpret"))
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 256, block_heads: int = 8,
+             init_state=None, interpret: bool = False):
+    """Public SSD scan, matching models.ssm.ssd_chunked's contract."""
+    b, s, nh, hp = x.shape
+    ds = B.shape[-1]
+    h0 = (jnp.zeros((b, nh, hp, ds), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    bh = block_heads
+    while nh % bh != 0:
+        bh //= 2
+    return ssd_scan_pallas(x, dt.astype(jnp.float32), A, B, C, D, h0,
+                           chunk=chunk, block_heads=bh, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Oracles for the SSD scan kernel.
+
+``ssd_ref_sequential`` is the direct (non-chunked) recurrence — the ground
+truth both the chunked jnp path (models/ssm.py) and the Pallas kernel are
+validated against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked  # chunked jnp path doubles as oracle
+
+
+def ssd_ref_sequential(x, dt, A, B, C, D, h0=None):
+    """Token-by-token recurrence. Same signature/shapes as the kernel."""
+    b, s, nh, hp = x.shape
+    ds = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    h = jnp.zeros((b, nh, hp, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (b,nh,hp),(b,nh),(b,ds),(b,ds)
+        a = jnp.exp(dtt * A[None, :])
+        h = a[:, :, None, None] * h + jnp.einsum("bh,bhp,bs->bhps", dtt, xt, Bt)
+        y = jnp.einsum("bs,bhps->bhp", Ct, h) + D[None, :, None] * xt
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,308 @@
+"""Loop-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE — useless for
+a scanned layer stack (layers × microbatches × attention-chunk loops all
+live in whiles). This module parses the optimized per-device HLO text,
+recovers the computation call graph with **while trip counts**, and
+accumulates:
+
+  * dot FLOPs            (matmuls dominate; elementwise ignored)
+  * bytes accessed       (operand + result bytes of top-level/fusion ops —
+                          approximately XLA's own traffic model)
+  * collective wire bytes (ring-model factors per op kind)
+
+each weighted by the product of enclosing loop trip counts.
+
+Trip counts come from the canonical counted-loop form: the while condition
+compares the induction variable against a constant — we take the largest
+integer constant in the condition computation. Dynamic-trip loops fall back
+to 1 and are flagged in ``unknown_trip_loops``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9a-z]*)\[([\d,]*)\]")
+# computation header: "%name (params...) -> result {" — params may contain
+# nested parens (tuple-typed), so match loosely
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_AFTER_TYPE_RE = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{(.*?)\}\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+def _split_type_op(rhs: str):
+    """Split an instruction RHS into (result type string, opcode).
+
+    Tuple result types contain parens and spaces — scan the balanced group;
+    scalar/array types are a single token.
+    """
+    s = rhs.strip()
+    if s.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        ty, rest = s[:end + 1], s[end + 1:]
+    else:
+        sp = s.find(" ")
+        if sp < 0:
+            return s, ""
+        ty, rest = s[:sp], s[sp:]
+    m = _OP_AFTER_TYPE_RE.match(rest)
+    return ty, (m.group(1) if m else "")
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    ty: str          # result type string
+    op: str          # opcode
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]  # instr name -> result type string
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_START_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        ty, op = _split_type_op(rhs)
+        cur.instrs.append(Instr(name, ty, op, line))
+        cur.shapes[name] = ty
+    return comps
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    """2 × result_elems × contracted_elems (per batch already in result)."""
+    ops = _OPERAND_RE.findall(ins.line.split("(", 1)[1])
+    lhs_ty = shapes.get(ops[0], "") if ops else ""
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contract = 1
+    if m and lhs_ty:
+        sm = _SHAPE_RE.search(lhs_ty)
+        if sm and sm.group(2):
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * shape_elems(ins.ty) * contract
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0]
+        return len([x for x in first.split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _wire_bytes(base: str, out_bytes: float, g: int) -> float:
+    if base == "all-gather":
+        return out_bytes * (g - 1) / g
+    if base == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if base == "all-reduce":
+        return out_bytes * 2 * (g - 1) / g
+    if base == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return float(out_bytes)  # collective-permute
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+    loop_trips: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    # top individual traffic contributors: (bytes×mult, op, result type,
+    # metadata op_name) — the profile the perf loop reads
+    top_bytes: List[Tuple[float, str, str, str]] = dataclasses.field(
+        default_factory=list)
+
+
+def _trip_count(cond: Computation) -> Optional[int]:
+    consts = [int(c) for i in cond.instrs for c in _CONST_RE.findall(i.line)]
+    return max(consts) if consts else None
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_START_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: the computation named *.main or the last one
+        cands = [n for n in comps if "main" in n]
+        entry = cands[0] if cands else (next(iter(comps)) if comps else None)
+
+    cost = HloCost()
+    if entry is None:
+        return cost
+
+    # computations reachable as fusion bodies should NOT be double counted
+    fused_targets = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if m:
+                    fused_targets.add(m.group(1))
+
+    def visit(name: str, mult: float, stack=()):
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                tm = _TRIP_RE.search(ins.line)
+                trips = int(tm.group(1)) if tm else None
+                if trips is None and mc and mc.group(1) in comps:
+                    trips = _trip_count(comps[mc.group(1)])
+                if trips is None:
+                    trips = 1
+                    cost.unknown_trip_loops += 1
+                cost.loop_trips.append((ins.name, trips))
+                if mb:
+                    visit(mb.group(1), mult * trips, stack + (name,))
+                continue
+            if ins.op in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", ins.line)
+                if m:
+                    visit(m.group(1), mult, stack + (name,))
+                continue
+            if ins.op == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"(?:true|false)_computation=%?([\w.\-]+))",
+                                     ins.line):
+                    tgt = m.group(1) or m.group(2)
+                    for t in (tgt or "").split(","):
+                        visit(t.strip().lstrip("%"), mult, stack + (name,))
+                continue
+
+            base = None
+            for c in COLLECTIVES:
+                if ins.op == c or ins.op == c + "-start":
+                    base = c
+                    break
+            if base is not None:
+                out_b = shape_bytes(ins.ty)
+                g = _group_size(ins.line)
+                w = _wire_bytes(base, out_b, g) * mult
+                cost.wire_bytes += w
+                cost.collective_counts[base] = (
+                    cost.collective_counts.get(base, 0) + int(mult))
+                cost.collective_bytes[base] = (
+                    cost.collective_bytes.get(base, 0.0) + w)
+
+            if ins.op in ("dot",):
+                cost.flops += _dot_flops(ins, comp.shapes) * mult
+            if ins.op == "fusion":
+                # fusion internals may contain dots — count them once per
+                # fusion execution
+                m = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if m and m.group(1) in comps:
+                    fc = comps[m.group(1)]
+                    for fi in fc.instrs:
+                        if fi.op == "dot":
+                            cost.flops += _dot_flops(fi, fc.shapes) * mult
+
+            # bytes accessed: operands + result of top-level ops (fusions
+            # are XLA's memory-traffic units; whiles/calls handled above)
+            if ins.op not in ("while", "call", "parameter", "constant",
+                              "get-tuple-element", "tuple", "bitcast"):
+                b = shape_bytes(ins.ty)
+                args = ins.line.split("(", 1)
+                if len(args) > 1:
+                    for opnd in _OPERAND_RE.findall(args[1].split(")")[0]):
+                        b += shape_bytes(comp.shapes.get(opnd, ""))
+                cost.bytes_accessed += b * mult
+                meta = ""
+                mm = re.search(r'op_name="([^"]*)"', ins.line)
+                if mm:
+                    meta = mm.group(1)
+                cost.top_bytes.append((b * mult, ins.op,
+                                       ins.ty.strip()[:48], meta[-80:]))
+
+    visit(entry, 1.0)
+    cost.top_bytes = sorted(cost.top_bytes, key=lambda t: -t[0])[:20]
+    return cost

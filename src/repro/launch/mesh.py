@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS for 512 host devices
+*before* any jax initialization; everything else sees the real devices).
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                # 256 chips (one v5e-256 pod)
+MULTI_POD = (2, 16, 16)              # 2 pods = 512 chips
+
+# TPU v5e-class hardware constants used by the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12             # FLOP/s
+HBM_BW = 819e9                       # B/s
+ICI_BW_PER_LINK = 50e9               # B/s per link (~4 links usable/chip)
+ICI_LINKS = 4
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def n_chips(multi_pod: bool = False) -> int:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    n = 1
+    for s in shape:
+        n *= s
+    return n

@@ -1,0 +1,179 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs_global   / (chips × 197 TF/s bf16)
+  memory     = HLO_bytes_global   / (chips × 819 GB/s HBM)
+  collective = wire_bytes_per_dev / (links × 50 GB/s ICI)
+
+Sources: ``compiled.cost_analysis()`` gives per-device FLOPs / bytes
+accessed of the partitioned module (multiplied back to global for the
+formula). Collective bytes are NOT in cost_analysis — we parse the
+optimized per-device HLO text and sum wire bytes per collective with the
+standard ring factors:
+
+  all-gather        out × (g-1)/g
+  reduce-scatter    out × (g-1)          (= in × (g-1)/g)
+  all-reduce        in  × 2(g-1)/g
+  all-to-all        in  × (g-1)/g
+  collective-permute  in × 1
+
+where g = replica-group size parsed from the op's ``replica_groups``.
+
+MODEL_FLOPS (the "useful FLOPs" yardstick) = 6·N_active·tokens for train,
+2·N_active·tokens for inference — the ratio against HLO_FLOPs exposes
+remat recompute and padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, ICI_LINKS,
+                               PEAK_FLOPS_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction: "%name = TYPE[shape]{layout} op-name(...)".
+# The opcode is the token immediately before the '(' argument list; the
+# result type(s) sit between '=' and the opcode.
+_OP_RE = re.compile(r"\s((?:all-gather|all-reduce|reduce-scatter|all-to-all|"
+                    r"collective-permute)(?:-start)?)\(")
+
+_SHAPE_RE = re.compile(r"([a-z]+\d*|pred|token|opaque)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [n_groups, group_size]
+        return int(m.group(2))
+    return 2  # conservative fallback
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    wire_bytes: float          # per-device bytes on the wire (ring model)
+    raw_bytes: Dict[str, float]
+    details: List[Tuple[str, int, float]]  # (op, group, wire_bytes)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    raw: Dict[str, float] = {}
+    details = []
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        op = m.group(1)
+        base = op[:-6] if op.endswith("-start") else op
+        # result type(s) are between '=' and the opcode token
+        eq = line.index("=")
+        ty = line[eq + 1: m.start()]
+        out_bytes = _shape_bytes(ty)
+        g = _group_size(line)
+        if base == "all-gather":
+            w = out_bytes * (g - 1) / g
+        elif base == "reduce-scatter":
+            w = out_bytes * (g - 1)
+        elif base == "all-reduce":
+            w = out_bytes * 2 * (g - 1) / g
+        elif base == "all-to-all":
+            w = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            w = out_bytes
+        counts[base] = counts.get(base, 0) + 1
+        raw[base] = raw.get(base, 0.0) + out_bytes
+        wire += w
+        details.append((base, g, w))
+    return CollectiveStats(counts, wire, raw, details)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: ONE token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(cost: Dict, hlo_text: str, chips: int,
+                   cfg: ModelConfig, shape: InputShape) -> Dict:
+    """Three-term roofline from the loop-aware HLO analysis.
+
+    ``cost`` = compiled.cost_analysis() — kept for reference, but its
+    while-loop bodies are counted ONCE, so the terms use
+    ``hlo_analysis.analyze`` (trip-count-weighted) instead.
+
+    The compute term takes max(dot FLOPs, MODEL_FLOPS/chips): XLA lowers
+    degenerate contractions (e.g. decode's hd/16-wide attention dots) to
+    multiply+reduce fusions that dot-counting misses, while MODEL_FLOPS is
+    a guaranteed floor.
+    """
+    from repro.launch.hlo_analysis import analyze
+    h = analyze(hlo_text)
+    mf = model_flops(cfg, shape)
+    dev_flops = max(h.flops, mf / chips)
+    t_compute = dev_flops / PEAK_FLOPS_BF16
+    t_memory = h.bytes_accessed / HBM_BW
+    t_coll = h.wire_bytes / (ICI_LINKS * ICI_BW_PER_LINK)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    hlo_global = h.flops * chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_dot_flops_per_device": h.flops,
+        "hlo_bytes_per_device": h.bytes_accessed,
+        "collective_wire_bytes_per_device": h.wire_bytes,
+        "collective_counts": h.collective_counts,
+        "collective_bytes_by_kind": h.collective_bytes,
+        "loop_trips": sorted(set(h.loop_trips), key=lambda t: -t[1])[:12],
+        "unknown_trip_loops": h.unknown_trip_loops,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / hlo_global if hlo_global else 0.0,
+        "cost_analysis_flops_raw": float(cost.get("flops", 0.0)),
+        "cost_analysis_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+        "chips": chips,
+    }

@@ -1,0 +1,281 @@
+"""Step functions + abstract input specs for every (arch × input shape).
+
+``input_specs`` returns ShapeDtypeStructs (with shardings attached) for
+every model input — the dry-run lowers against these with zero allocation.
+
+Step kinds per input shape (configs/shapes.py):
+  train_4k     → train_step   (forward+backward+AdamW, remat, microbatched)
+  prefill_32k  → prefill_step (history → decode cache + last-token logits)
+  decode_32k   → serve_step   (ONE token against a seq_len KV cache)
+  long_500k    → serve_step   (512k context; sub-quadratic policy: SSM /
+                 hybrid native, dense via the sliding-window ring cache)
+
+[vlm]/[audio] archs: ``prefix_embeds`` stand in for the stubbed frontend —
+patch/frame embeddings of the right shape occupy the leading positions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models.frontend import frontend_prefix_len
+from repro.models.model import cache_shapes, decode_step, param_shapes, prefill
+from repro.sharding.rules import (batch_pspec, cache_pspecs, data_axes,
+                                  param_pspecs)
+from repro.training.optimizer import AdamWConfig, OptState
+from repro.training.train_loop import TrainConfig, make_train_step
+
+# Sliding window substituted for pure full-attention archs at long_500k
+# (DESIGN.md §4: full attention at 512k is excluded by the assignment).
+LONG_CONTEXT_WINDOW = 4096
+
+
+def microbatches_for(cfg: ModelConfig, shape: InputShape,
+                     act_budget: float = 1.5 * 2**30,
+                     dp: int = 16, tp: int = 16) -> int:
+    """Gradient-accumulation factor from an activation-memory budget.
+
+    Perf iteration (§Perf, mixtral train): FSDP weight all-gathers repeat
+    per microbatch, so mb should be the SMALLEST value whose remat-saved
+    layer-boundary activations (B/(dp·mb) rows × L × S × d × 2B / tp) fit
+    the budget — the original param-count heuristic (mb=16 for >20B) cost
+    8× needless weight traffic on mixtral.
+    """
+    bytes_row = cfg.n_layers * shape.seq_len * cfg.d_model * 2 / tp
+    rows = shape.global_batch / dp
+    mb = 1
+    while mb < rows and rows / mb * bytes_row > act_budget:
+        mb *= 2
+    return mb
+
+
+def arch_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments (the long_500k SWA substitution)."""
+    if (shape.name == "long_500k" and cfg.ssm is None
+            and not cfg.sliding_window):
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# ----------------------------------------------------------------------
+# Sharded abstract values
+# ----------------------------------------------------------------------
+
+def _sharded(tree, spec_tree, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    def one(x, spec):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, tree, spec_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, decode: bool = False):
+    shapes = param_shapes(cfg)
+    specs = param_pspecs(cfg, mesh, decode=decode)
+    return _sharded(shapes, specs, mesh), specs
+
+
+def abstract_opt(cfg: ModelConfig, mesh: Mesh):
+    pshapes = param_shapes(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    shapes = OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      master=jax.tree.map(f32, pshapes),
+                      m=jax.tree.map(f32, pshapes),
+                      v=jax.tree.map(f32, pshapes))
+    pspecs = param_pspecs(cfg, mesh)
+    specs = OptState(step=P(), master=pspecs, m=pspecs, v=pspecs)
+    return _sharded(shapes, specs, mesh), specs
+
+
+def _activation_shardings(cfg: ModelConfig, mesh: Mesh):
+    from repro.sharding.rules import head_pspec
+    dp = data_axes(mesh)
+    act = NamedSharding(mesh, P(dp, None, "model"))
+    logits = NamedSharding(mesh, P(dp, None, "model"))
+    head = NamedSharding(mesh, head_pspec(cfg, mesh))
+    return act, logits, head
+
+
+def _moe_use_shardings(cfg: ModelConfig, mesh: Mesh):
+    """Expert-weight shardings at USE time (gather-over-dp FSDP idiom)."""
+    if cfg.moe is None:
+        return None
+    from repro.sharding.rules import ShardingRules
+    r = ShardingRules.make(cfg, mesh)
+    if r.moe_experts_on_tp:
+        up = NamedSharding(mesh, P("model", None, None))
+        down = NamedSharding(mesh, P("model", None, None))
+        return up, down
+    e, tp = cfg.moe.n_experts, r.tp_size
+    if tp % e == 0 and cfg.d_ff % (tp // e) == 0 and tp // e > 1:
+        # all-to-all EP with f-splitting: e experts × (tp/e) f-shards
+        m = tp // e
+        dp = data_axes(mesh)
+        return ("ep", NamedSharding(mesh, P(dp, "model", None, None)), m)
+    # granite (40e on tp=16): neither divides. Constraining the weights to
+    # gathered form made GSPMD REPLICATE the expert compute (compute term
+    # 8.5→34.8 s — hypothesis refuted, see §Perf); XLA's own partial-sum
+    # strategy is the better one. Leave it alone.
+    return None
+
+
+def _attn_pad_policy(cfg: ModelConfig, mesh: Mesh):
+    """Pad the attention head axis to a tp multiple when it doesn't divide
+    (llava 56H, granite 24H) so scores shard instead of psum-replicating."""
+    tp = mesh.shape.get("model", 1)
+    if cfg.n_heads and cfg.n_heads % tp:
+        dp = data_axes(mesh)
+        return tp, NamedSharding(mesh, P(dp, None, "model", None))
+    return 0, None
+
+
+# ----------------------------------------------------------------------
+# input_specs + step factories, per shape kind
+# ----------------------------------------------------------------------
+
+def make_step_and_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                        ) -> Tuple[Callable, Tuple, Any, Any]:
+    """Returns (step_fn, example_args, in_shardings, out_shardings)."""
+    cfg = arch_for_shape(cfg, shape)
+    if shape.kind == "train":
+        return _train_setup(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return _prefill_setup(cfg, shape, mesh)
+    return _decode_setup(cfg, shape, mesh)
+
+
+def _batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 with_labels: bool):
+    b, s = shape.global_batch, shape.seq_len
+    bspec = batch_pspec(mesh, b)
+    pfx = frontend_prefix_len(cfg, s)
+    toks = jax.ShapeDtypeStruct((b, s - pfx), jnp.int32)
+    batch = {"tokens": toks}
+    specs = {"tokens": bspec}
+    if pfx:
+        batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, pfx, cfg.d_model), jnp.bfloat16)
+        specs["prefix_embeds"] = P(bspec[0], None, None)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = bspec
+        if pfx:  # no loss on the frontend-embedding positions
+            batch["loss_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+            specs["loss_mask"] = bspec
+    return batch, specs
+
+
+def _train_setup(cfg, shape, mesh):
+    act, logits, head = _activation_shardings(cfg, mesh)
+    head_pad, attn_sh = _attn_pad_policy(cfg, mesh)
+    tcfg = TrainConfig(
+        adamw=AdamWConfig(),
+        microbatches=microbatches_for(cfg, shape),
+        remat=True, q_chunk=512,
+        act_sharding=act, logits_sharding=logits, head_sharding=head,
+        embed_mesh=mesh, head_pad_to=head_pad, attn_sharding=attn_sh,
+        moe_sharding=_moe_use_shardings(cfg, mesh))
+    step = make_train_step(cfg, tcfg)
+
+    params, pspecs = abstract_params(cfg, mesh)
+    opt, ospecs = abstract_opt(cfg, mesh)
+    batch, bspecs = _batch_specs(cfg, shape, mesh, with_labels=True)
+    batch_sharded = _sharded(batch, bspecs, mesh)
+
+    ns = lambda spec: jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), ns(ospecs), ns(bspecs))
+    metric_sh = {k: NamedSharding(mesh, P()) for k in
+                 ("loss", "acc", "moe_aux", "grad_norm", "lr")}
+    out_sh = (ns(pspecs), ns(ospecs), metric_sh)
+    return step, (params, opt, batch_sharded), in_sh, out_sh
+
+
+def _prefill_setup(cfg, shape, mesh):
+    act, _, head = _activation_shardings(cfg, mesh)
+    dp = data_axes(mesh)
+
+    head_pad, attn_sh = _attn_pad_policy(cfg, mesh)
+
+    moe_sh = _moe_use_shardings(cfg, mesh)
+
+    def prefill_step(params, batch):
+        logits, caches = prefill(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            q_chunk=512, act_sharding=act, head_sharding=head,
+            logits_last_only=True, embed_mesh=mesh,
+            head_pad_to=head_pad, attn_sharding=attn_sh,
+            moe_sharding=moe_sh)
+        return logits[:, 0], caches
+
+    params, pspecs = abstract_params(cfg, mesh)
+    batch, bspecs = _batch_specs(cfg, shape, mesh, with_labels=False)
+    batch_sharded = _sharded(batch, bspecs, mesh)
+
+    ns = lambda spec: jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), ns(bspecs))
+    # prefill cache = per-layer K/V (B,S,kv,hd) / ssm states — batch over dp
+    kv_like = _prefill_cache_pspecs(cfg, mesh, shape.global_batch)
+    out_sh = (NamedSharding(mesh, P(dp, "model")), ns(kv_like))
+    return prefill_step, (params, batch_sharded), in_sh, out_sh
+
+
+def _prefill_cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int):
+    """PartitionSpecs for the sequence-form prefill cache output."""
+    from repro.models.model import pattern_sig
+    from repro.sharding.rules import ShardingRules
+    r = ShardingRules.make(cfg, mesh)
+    b_ok = batch % r.dp_size == 0
+    bspec = r.dp if b_ok else None
+    hd_tp = r.tpa(cfg.head_dim_)
+    out = {}
+    for p, (kind, _) in enumerate(pattern_sig(cfg)):
+        if kind == "attn":
+            kv = P(None, bspec, None, None, hd_tp)
+            out[f"pos{p}"] = {"k": kv, "v": kv}
+        else:
+            out[f"pos{p}"] = {
+                "conv_x": P(None, bspec, None, r.tpa(cfg.d_inner)),
+                "conv_B": P(None, bspec, None, None),
+                "conv_C": P(None, bspec, None, None),
+                "state": P(None, bspec, r.tpa(cfg.n_ssm_heads), None, None),
+            }
+    return out
+
+
+def _decode_setup(cfg, shape, mesh):
+    b, s = shape.global_batch, shape.seq_len
+
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = decode_step(params, cfg, caches, tokens, pos)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    params, pspecs = abstract_params(cfg, mesh, decode=True)
+    cshapes = cache_shapes(cfg, b, s)
+    cspecs = cache_pspecs(cfg, mesh, b)
+    caches = _sharded(cshapes, cspecs, mesh)
+
+    bspec = batch_pspec(mesh, b)
+    tokens = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32, sharding=NamedSharding(mesh, bspec))
+    pos = jax.ShapeDtypeStruct(
+        (b,), jnp.int32, sharding=NamedSharding(mesh, P(bspec[0])))
+
+    ns = lambda spec: jax.tree.map(lambda p: NamedSharding(mesh, p), spec,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(pspecs), ns(cspecs), NamedSharding(mesh, bspec),
+             NamedSharding(mesh, P(bspec[0])))
+    out_sh = (NamedSharding(mesh, P(bspec[0])), ns(cspecs))
+    return serve_step, (params, caches, tokens, pos), in_sh, out_sh

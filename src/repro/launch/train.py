@@ -1,0 +1,74 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --reduced --steps 50 --batch 8 --seq 128 [--ckpt out.msgpack]
+
+On this CPU host use ``--reduced`` (the 2-layer smoke variant); on a real
+TPU pod the full config + production mesh apply (sharding rules from
+``repro.sharding``). Data: the synthetic next-token stream from
+``repro.data`` (the ITFI ranker trains on real simulator logs via
+examples/train_ranker.py instead).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer CPU-scale variant of the same family")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs.base import get_config, reduced
+    from repro.models.model import init_params
+    from repro.training.checkpoint import save_checkpoint
+    from repro.training.optimizer import AdamWConfig, init_opt_state
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"family={cfg.family}")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed),
+                         dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+    opt = init_opt_state(params)
+    tcfg = TrainConfig(
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps),
+        microbatches=args.microbatches, remat=not args.reduced,
+        param_dtype=jnp.float32 if args.reduced else jnp.bfloat16)
+
+    rng = np.random.RandomState(args.seed)
+
+    def gen():
+        # zipf-ish synthetic next-token stream with local structure
+        for _ in range(args.steps):
+            toks = rng.randint(1, cfg.vocab_size, (args.batch, args.seq))
+            labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+            yield {"tokens": jnp.asarray(toks, jnp.int32),
+                   "labels": jnp.asarray(labels, jnp.int32)}
+
+    out = train(cfg, tcfg, params, opt, gen(), log_every=10)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, {"params": out["params"]},
+                        step=args.steps, metadata={"arch": cfg.name})
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    block_pattern, cache_from_prefill, cache_shapes, decode_step, extend,
+    forward, init_cache, init_params, param_shapes, pattern_sig, prefill,
+)

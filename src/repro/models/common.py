@@ -1,0 +1,74 @@
+"""Shared model utilities: initializers, dtype policy, sharding helpers."""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree of jnp arrays
+
+DEFAULT_PARAM_DTYPE = jnp.bfloat16
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+
+def normal_init(key, shape, std, dtype=DEFAULT_PARAM_DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def scaled_init(key, shape, fan_in, dtype=DEFAULT_PARAM_DTYPE):
+    return normal_init(key, shape, 1.0 / np.sqrt(max(fan_in, 1)), dtype)
+
+
+def zeros(shape, dtype=DEFAULT_PARAM_DTYPE):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=DEFAULT_PARAM_DTYPE):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Split-on-demand PRNG key dispenser for init code."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def shard_hint(x, spec: Optional[Tuple]) -> jax.Array:
+    """Apply a sharding constraint if a mesh is active; no-op otherwise.
+
+    ``spec`` is a raw PartitionSpec-compatible tuple whose entries are mesh
+    axis names (already resolved from logical names by the caller).
+    """
+    if spec is None:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - old jax fallback
+        mesh = None
+    if mesh is None or mesh.empty:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def tree_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

@@ -1,0 +1,47 @@
+"""Modality frontend STUBS (the one permitted carve-out, see DESIGN.md §4).
+
+[vlm]/[audio] architectures specify the transformer backbone only; the
+frontends here produce *correctly-shaped* precomputed embeddings / codec
+tokens so examples and smoke tests are runnable end to end without a real
+ViT or EnCodec.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# llava-next anyres tiling: a 672x672 image -> 4 tiles + base = 5 * 576
+VISION_PATCHES_PER_IMAGE = 2880
+# EnCodec at 50 Hz frames
+AUDIO_FRAMES_PER_SECOND = 50
+
+
+def frontend_prefix_len(cfg: ModelConfig, seq_len: int) -> int:
+    """How many positions of an input of ``seq_len`` are frontend embeds."""
+    if cfg.frontend == "vision":
+        return min(VISION_PATCHES_PER_IMAGE, seq_len // 2)
+    if cfg.frontend == "audio":
+        # musicgen conditions on a text/melody prompt embedding prefix
+        return min(64, seq_len // 8)
+    return 0
+
+
+def vision_stub_embeds(rng, batch: int, n_patches: int, d_model: int,
+                       dtype=jnp.bfloat16):
+    """Stand-in for SigLIP/ViT + projector output (patch embeddings)."""
+    return jax.random.normal(rng, (batch, n_patches, d_model), jnp.float32
+                             ).astype(dtype) * 0.02
+
+
+def audio_stub_embeds(rng, batch: int, n_frames: int, d_model: int,
+                      dtype=jnp.bfloat16):
+    """Stand-in for the conditioning encoder output (T5/melody features)."""
+    return jax.random.normal(rng, (batch, n_frames, d_model), jnp.float32
+                             ).astype(dtype) * 0.02
+
+
+def encodec_stub_tokens(rng, batch: int, n_frames: int, vocab: int = 2048):
+    """Stand-in for EnCodec RVQ codes (single-stream, per assignment)."""
+    return jax.random.randint(rng, (batch, n_frames), 0, vocab, jnp.int32)

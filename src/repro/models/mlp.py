@@ -1,0 +1,25 @@
+"""SwiGLU MLP."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, scaled_init
+
+
+def init_mlp(kg: KeyGen, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return {
+        "gate": scaled_init(kg(), (d_model, d_ff), d_model, dtype),
+        "up": scaled_init(kg(), (d_model, d_ff), d_model, dtype),
+        "down": scaled_init(kg(), (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def mlp(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["gate"])
+    u = jnp.einsum("...d,df->...f", x, params["up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["down"])

@@ -1,0 +1,20 @@
+"""RMSNorm (scale-only), computed in fp32 for stability."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, ones
+
+
+def init_rmsnorm(keys: KeyGen, dim: int, dtype=jnp.bfloat16):
+    del keys
+    return {"scale": ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,26 @@
+"""Rotary position embeddings (llama-style rotate-half)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,), fp32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate ``x`` of shape (..., seq, heads, head_dim) by ``positions``.
+
+    ``positions`` broadcasts against the leading dims of x up to ``seq``:
+    typically (seq,) or (batch, seq).
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, hd/2) broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

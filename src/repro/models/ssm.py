@@ -1,0 +1,273 @@
+"""Mamba2 block: state-space duality (SSD) chunked scan.
+
+Follows the discrete SSD formulation of [arXiv:2405.21060]: per head h with
+head state (head_dim, d_state),
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) ⊗ B_t
+    y_t = C_t · h_t + D * x_t
+
+computed chunkwise — an intra-chunk quadratic ("attention-like") term plus an
+inter-chunk recurrent state pass (``lax.scan`` over chunks). The Pallas
+``ssd_scan`` kernel implements the same contraction with the state carried in
+VMEM scratch across a sequential grid dimension.
+
+Sharding: heads (= d_inner/head_dim) shard over the model axis; B/C are
+shared across heads (single group), replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.common import KeyGen, normal_init, scaled_init, zeros
+
+
+def init_ssm(kg: KeyGen, cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    s = cfg.ssm
+    d, din, nh, ds, cw = (cfg.d_model, cfg.d_inner, cfg.n_ssm_heads,
+                          s.d_state, s.conv_width)
+    # dt bias initialized so softplus(dt_bias) spans [dt_min, dt_max]
+    import numpy as np
+    u = np.random.RandomState(0).uniform(size=(nh,))
+    dt_init = s.dt_min * (s.dt_max / s.dt_min) ** u
+    dt_bias = np.log(np.expm1(dt_init))
+    return {
+        "wz": scaled_init(kg(), (d, din), d, dtype),
+        "wx": scaled_init(kg(), (d, din), d, dtype),
+        "wB": scaled_init(kg(), (d, ds), d, dtype),
+        "wC": scaled_init(kg(), (d, ds), d, dtype),
+        "wdt": scaled_init(kg(), (d, nh), d, dtype),
+        "conv_x": normal_init(kg(), (cw, din), 0.2, dtype),
+        "conv_B": normal_init(kg(), (cw, ds), 0.2, dtype),
+        "conv_C": normal_init(kg(), (cw, ds), 0.2, dtype),
+        "conv_bias_x": zeros((din,), dtype),
+        "conv_bias_B": zeros((ds,), dtype),
+        "conv_bias_C": zeros((ds,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "norm_scale": jnp.ones((din,), dtype),
+        "out_proj": scaled_init(kg(), (din, d), din, dtype),
+    }
+
+
+def _causal_conv(x, w, b, tail=None, valid=None):
+    """Depthwise causal conv. x (B,S,C), w (cw,C), b (C,).
+
+    ``tail`` (B,cw-1,C): state from the previous segment (decode/continuation);
+    zeros if None. Returns (y (B,S,C), new_tail (B,cw-1,C)).
+
+    ``valid`` (B,S) bool — assumed a contiguous run per row (right-aligned
+    prefill or left-aligned inject suffix). The new tail is gathered per
+    row so it ends at the row's LAST REAL token; rows with no valid tokens
+    pass the incoming tail through unchanged.
+    """
+    bsz, s, c = x.shape
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((bsz, cw - 1, c), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # (B, S+cw-1, C)
+    y = sum(xp[:, i:i + s] * w[i] for i in range(cw)) + b
+    if valid is None:
+        new_tail = xp[:, s: s + cw - 1]
+    else:
+        last = jnp.max(jnp.where(valid, jnp.arange(s)[None, :], -1), axis=-1)
+        idx = last[:, None] + 1 + jnp.arange(cw - 1)[None, :]  # xp coords
+        new_tail = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q) lower-triangular cumulative segment sums:
+    out[i, j] = sum_{j < t <= i} x[t], -inf above diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int, init_state=None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan (pure-jnp reference / XLA path).
+
+    x (b,s,nh,hp); dt (b,s,nh) post-softplus; A (nh,) negative;
+    B,C (b,s,ds); D (nh,). Returns (y (b,s,nh,hp), final_state (b,nh,hp,ds)).
+    """
+    b, s, nh, hp = x.shape
+    ds = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def r(t):  # (b,s,...) -> (b,nc,chunk,...)
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    xc, dtc, Bc, Cc = r(xf), r(dtf), r(Bf), r(Cf)
+    dA = dtc * A[None, None, None, :]  # (b,nc,Q,nh)
+    dA_cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic) term --------------------------------
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 2, 3)))  # (b,nc,nh,Q,Q)
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)  # (b,nc,Q,Q)
+    M = scores[:, :, None] * L  # (b,nc,nh,Q,Q)
+    y_intra = jnp.einsum("bchij,bcjh,bcjhp->bcihp", M, dtc, xc)
+
+    # ---- chunk states + inter-chunk recurrence ------------------------
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,Q,nh)
+    chunk_states = jnp.einsum(
+        "bcjs,bcjh,bcjhp->bchps", Bc, dtc * decay_to_end, xc)  # (b,nc,nh,hp,ds)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b,nc,nh)
+
+    h0 = (jnp.zeros((b, nh, hp, ds), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        st, dec = inp  # (b,nh,hp,ds), (b,nh)
+        h_out = h  # state *entering* this chunk
+        h_new = dec[:, :, None, None] * h + st
+        return h_new, h_out
+
+    sc = jnp.moveaxis(chunk_states, 1, 0)  # (nc,b,nh,hp,ds)
+    dc = jnp.moveaxis(chunk_decay, 1, 0)  # (nc,b,nh)
+    h_final, h_in = jax.lax.scan(step, h0, (sc, dc))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (b,nc,nh,hp,ds) state entering chunk
+
+    decay_from_start = jnp.exp(dA_cum)  # (b,nc,Q,nh)
+    y_inter = jnp.einsum("bcis,bcih,bchps->bcihp", Cc, decay_from_start, h_in)
+
+    y = (y_intra + y_inter + D[None, None, None, :, None] * xc)
+    return y.reshape(b, s, nh, hp).astype(x.dtype), h_final
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """Single-token state update. x (b,nh,hp); dt (b,nh); B,C (b,ds);
+    state (b,nh,hp,ds). Returns (y (b,nh,hp), new_state)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    a = jnp.exp(dtf * A[None, :])  # (b,nh)
+    upd = jnp.einsum("bh,bhp,bs->bhps", dtf, xf, Bf)
+    new_state = a[:, :, None, None] * state + upd
+    y = jnp.einsum("bs,bhps->bhp", Cf, new_state) + D[None, :, None] * xf
+    return y.astype(x.dtype), new_state
+
+
+def _gated_norm(y, z, scale, eps):
+    """Mamba2 gated RMSNorm: rmsnorm(y * silu(z)) * scale."""
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def ssm_forward(params, x, cfg: ModelConfig, *, cache=None, use_kernel=False,
+                valid=None) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Full-sequence Mamba2 mixer. x (B,S,d) -> (y (B,S,d), cache).
+
+    cache = {"conv_x","conv_B","conv_C" tails, "state"} — returned so a
+    decode session (or an injection suffix-continuation) can resume.
+
+    ``valid`` (B,S) bool: padding positions become *identity* steps in the
+    recurrence (dt forced to 0 ⇒ no decay, no state update), so left-padded
+    batches do not contaminate the state. Pad-position outputs are garbage
+    and must be masked by the caller (the loss / logits gather does).
+    """
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    nh, hp, ds = cfg.n_ssm_heads, s_cfg.head_dim, s_cfg.d_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xr = jnp.einsum("bsd,de->bse", x, params["wx"])
+    Br = jnp.einsum("bsd,de->bse", x, params["wB"])
+    Cr = jnp.einsum("bsd,de->bse", x, params["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["wdt"])
+
+    if valid is not None:
+        # zero pad inputs so they can't leak through the causal conv window
+        vm = valid[..., None].astype(xr.dtype)
+        xr, Br, Cr = xr * vm, Br * vm, Cr * vm
+
+    tails = cache or {}
+    xr, tail_x = _causal_conv(xr, params["conv_x"], params["conv_bias_x"],
+                              tails.get("conv_x"), valid)
+    Br, tail_B = _causal_conv(Br, params["conv_B"], params["conv_bias_B"],
+                              tails.get("conv_B"), valid)
+    Cr, tail_C = _causal_conv(Cr, params["conv_C"], params["conv_bias_C"],
+                              tails.get("conv_C"), valid)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if valid is not None:
+        dt = dt * valid[..., None].astype(jnp.float32)  # identity steps
+    A = -jnp.exp(params["A_log"])
+    xh = xr.reshape(b, s, nh, hp)
+
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, h_final = ssd_ops.ssd_scan(
+            xh, dt, A, Br, Cr, params["D"], chunk=s_cfg.chunk_size,
+            init_state=tails.get("state"))
+    else:
+        y, h_final = ssd_chunked(xh, dt, A, Br, Cr, params["D"],
+                                 chunk=min(s_cfg.chunk_size, s),
+                                 init_state=tails.get("state"))
+
+    y = y.reshape(b, s, -1)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y.reshape(b * s, -1),
+                     params["out_proj"]).reshape(b, s, -1)
+    cache_out = {"conv_x": tail_x, "conv_B": tail_B, "conv_C": tail_C,
+                 "state": h_final}
+    return out, cache_out
+
+
+def ssm_decode(params, x, cache, cfg: ModelConfig,
+               ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One-token decode. x (B,1,d); cache from ssm_forward/init_ssm_cache."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    nh, hp = cfg.n_ssm_heads, s_cfg.head_dim
+    x1 = x[:, 0]
+
+    z = x1 @ params["wz"]
+    xr = x1 @ params["wx"]
+    Br = x1 @ params["wB"]
+    Cr = x1 @ params["wC"]
+    dt = x1 @ params["wdt"]
+
+    def conv_step(tail, new, w, bias):
+        # tail (B,cw-1,C), new (B,C)
+        window = jnp.concatenate([tail, new[:, None]], axis=1)  # (B,cw,C)
+        y = jnp.einsum("bwc,wc->bc", window, w) + bias
+        return jax.nn.silu(y.astype(jnp.float32)).astype(new.dtype), window[:, 1:]
+
+    xr, tail_x = conv_step(cache["conv_x"], xr, params["conv_x"], params["conv_bias_x"])
+    Br, tail_B = conv_step(cache["conv_B"], Br, params["conv_B"], params["conv_bias_B"])
+    Cr, tail_C = conv_step(cache["conv_C"], Cr, params["conv_C"], params["conv_bias_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_state = ssd_decode_step(
+        xr.reshape(b, nh, hp), dt, A, Br, Cr, params["D"], cache["state"])
+
+    y = y.reshape(b, -1)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps).astype(x.dtype)
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv_x": tail_x, "conv_B": tail_B, "conv_C": tail_C,
+                 "state": new_state}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    return {
+        "conv_x": zeros((batch, s.conv_width - 1, cfg.d_inner), dtype),
+        "conv_B": zeros((batch, s.conv_width - 1, s.d_state), dtype),
+        "conv_C": zeros((batch, s.conv_width - 1, s.d_state), dtype),
+        "state": jnp.zeros((batch, cfg.n_ssm_heads, s.head_dim, s.d_state),
+                           jnp.float32),
+    }

@@ -1,0 +1,2 @@
+from repro.serving.engine import (  # noqa: F401
+    ServingConfig, ServingEngine, make_serve_step)

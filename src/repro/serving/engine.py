@@ -1,0 +1,167 @@
+"""TPU serving engine — the ITFI inference flow as cache operations.
+
+The paper's injection maps onto TPU serving as **incremental prefill**
+(DESIGN.md §2): the batch features correspond to a cached model state
+(KV cache for attention layers, recurrent state for SSM layers) that the
+daily job can materialize; injecting fresh events only runs the *suffix*
+through the model — O(Δ) cost instead of O(full history):
+
+    snapshot = engine.prefill(batch_history)        # daily job, cacheable
+    state    = engine.inject(snapshot, fresh_events)  # per-request, cheap
+    logits   = engine.decode(state, token, pos)       # unchanged serving
+
+``prefill``/``inject`` return *sequence-form* caches (K/V grown along the
+sequence dim; SSM conv tails + state); ``finalize`` converts to the
+fixed-capacity ring cache that ``decode`` uses. All entry points are jit'd
+once per shape; the engine pads requests to fixed shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import (cache_from_prefill, decode_step, extend,
+                                init_cache, prefill)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    max_batch: int = 8
+    prefill_len: int = 1024        # padded batch-history length
+    inject_len: int = 32           # padded fresh-suffix length
+    cache_capacity: int = 2048     # ring-cache slots for decode
+    temperature: float = 0.0       # 0 = greedy
+    q_chunk: int = 512
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(functools.partial(
+            _prefill_impl, cfg=cfg, q_chunk=scfg.q_chunk))
+        self._inject = jax.jit(functools.partial(
+            _inject_impl, cfg=cfg, q_chunk=scfg.q_chunk))
+        self._finalize = jax.jit(functools.partial(
+            _finalize_impl, cfg=cfg, capacity=scfg.cache_capacity))
+        self._decode = jax.jit(functools.partial(_decode_impl, cfg=cfg))
+
+    # ------------------------------------------------------------------
+    def pad_tokens(self, seqs, length: int, align: str = "right",
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pad a list of variable-length token lists into (tokens, valid)
+        of shape (max_batch, length).
+
+        Prefill buffers are right-aligned (real tokens end at the last
+        buffer position, so one uniform ``next_pos`` covers the batch);
+        inject suffixes are LEFT-aligned (real tokens contiguous from the
+        row's ``next_pos`` — RoPE distances stay exact per row).
+        """
+        b = self.scfg.max_batch
+        toks = np.zeros((b, length), np.int32)
+        valid = np.zeros((b, length), bool)
+        for i, s in enumerate(seqs[:b]):
+            s = list(s)[-length:]
+            if not s:
+                continue
+            if align == "right":
+                toks[i, length - len(s):] = s
+                valid[i, length - len(s):] = True
+            else:
+                toks[i, :len(s)] = s
+                valid[i, :len(s)] = True
+        return toks, valid
+
+    # ------------------------------------------------------------------
+    def prefill(self, tokens, valid) -> Dict[str, Any]:
+        """Materialize the batch-history state (the daily-job analogue).
+
+        Positions index the padded buffer (real tokens right-aligned), so
+        subsequent inject/decode positions continue at ``buf_len`` —
+        relative distances between real tokens are exact under RoPE.
+        """
+        tokens = jnp.asarray(tokens)
+        valid = jnp.asarray(valid)
+        logits, caches = self._prefill(self.params, tokens, valid)
+        b, s = tokens.shape
+        return {"caches": caches, "valid": valid,
+                # right-aligned prefill: every row's next position is S
+                "next_pos": jnp.full((b,), s, jnp.int32),
+                "logits": logits}
+
+    def inject(self, state: Dict[str, Any], suffix_tokens, suffix_valid,
+               ) -> Dict[str, Any]:
+        """Incremental prefill of fresh events against a cached state —
+        the paper's injection: O(suffix) compute, model untouched.
+        Suffix must be LEFT-aligned (see pad_tokens)."""
+        sv = jnp.asarray(suffix_valid)
+        logits, caches = self._inject(
+            self.params, state["caches"], jnp.asarray(suffix_tokens),
+            sv, state["valid"], state["next_pos"])
+        return {"caches": caches,
+                "valid": jnp.concatenate([state["valid"], sv], axis=1),
+                "next_pos": state["next_pos"] + sv.sum(-1).astype(jnp.int32),
+                "logits": logits}
+
+    def finalize(self, state: Dict[str, Any]) -> Dict[str, Any]:
+        """Sequence-form state -> fixed-capacity ring cache for decode."""
+        caches = self._finalize(state["caches"], state["valid"])
+        return {"caches": caches, "pos": state["next_pos"]}
+
+    def decode(self, dec: Dict[str, Any], tokens) -> Tuple[jnp.ndarray, Dict]:
+        """One serve step: tokens (B,1) -> (logits (B,Vp), updated dec)."""
+        logits, caches = self._decode(self.params, dec["caches"],
+                                      jnp.asarray(tokens), dec["pos"])
+        return logits[:, 0], {"caches": caches, "pos": dec["pos"] + 1}
+
+    def sample(self, logits, rng=None) -> jnp.ndarray:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            rng, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+
+# ----------------------------------------------------------------------
+# jit bodies (pure functions of pytrees + static cfg)
+# ----------------------------------------------------------------------
+
+def _prefill_impl(params, tokens, valid, *, cfg, q_chunk):
+    return prefill(params, cfg, tokens, valid=valid, q_chunk=q_chunk)
+
+
+def _inject_impl(params, caches, tokens, valid, prefix_valid, start, *,
+                 cfg, q_chunk):
+    return extend(params, cfg, caches, tokens, start,
+                  valid=valid, prefix_valid=prefix_valid, q_chunk=q_chunk)
+
+
+def _finalize_impl(caches, valid, *, cfg, capacity):
+    return cache_from_prefill(cfg, caches, capacity, valid=valid)
+
+
+def _decode_impl(params, caches, tokens, pos, *, cfg):
+    return decode_step(params, cfg, caches, tokens, pos)
+
+
+# ----------------------------------------------------------------------
+# serve_step for the dry-run: ONE token against a seq_len cache
+# ----------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig):
+    """The function the decode-shape dry-runs lower: greedy one-token step.
+
+    signature: (params, caches, tokens (B,1), pos (B,)) ->
+               (next_token (B,), caches')
+    """
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = decode_step(params, cfg, caches, tokens, pos)
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return nxt, caches
+    return serve_step

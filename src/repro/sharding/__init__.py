@@ -1,0 +1,2 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules, batch_pspec, cache_pspecs, data_axes, param_pspecs)

@@ -1,0 +1,257 @@
+"""Sharding rules: ModelConfig × mesh → PartitionSpec pytrees.
+
+2-D "FSDP × TP" layout à la MaxText (DESIGN.md §5):
+
+* ``data`` axis (plus the outer ``pod`` axis on multi-pod meshes) shards the
+  batch and, FSDP-style, the d_model dimension of weight matrices.
+* ``model`` axis is tensor parallelism: attention heads (or head_dim when
+  the head count doesn't divide), MLP d_ff, MoE experts (or expert d_ff),
+  SSM heads, and the embedding's d_model.
+
+Every rule degrades to replication when a dimension doesn't divide the
+axis size — jit rejects uneven shardings, so divisibility is checked here,
+not discovered at compile time.
+
+The functions return **PartitionSpec pytrees** matching the abstract pytrees
+from ``models.model.param_shapes`` / ``cache_shapes``; launch code wraps
+them in NamedSharding(mesh, spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The (super-)data axes: ("pod","data") on multi-pod, else ("data",)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolved layout decisions for one (config, mesh) pair."""
+    cfg: ModelConfig
+    dp: Tuple[str, ...]        # data axes (batch / FSDP)
+    tp: str                    # model axis
+    dp_size: int
+    tp_size: int
+    # resolved choices
+    attn_heads_on_tp: bool     # heads vs head_dim on the model axis
+    moe_experts_on_tp: bool    # expert axis vs expert-d_ff on the model axis
+
+    @classmethod
+    def make(cls, cfg: ModelConfig, mesh: Mesh,
+             decode: bool = False) -> "ShardingRules":
+        dp = data_axes(mesh)
+        tp = "model" if "model" in mesh.axis_names else None
+        tpn = axis_size(mesh, tp) if tp else 1
+        # Decode perf iteration (EXPERIMENTS.md §Perf): attention layout
+        # must MATCH the KV-cache layout or XLA re-gathers the whole cache
+        # per layer per token (observed 8 GiB wire/step on llama decode).
+        # Cache shards kv-heads when they divide tp, else head_dim — so q/o
+        # follow the same rule in decode mode (scores psum over tp is tiny:
+        # (B,H,1,W) vs the (B,W,kv,hd) cache).
+        heads_on_tp = (_div(cfg.n_kv_heads, tpn) if decode
+                       else _div(cfg.n_heads, tpn))
+        return cls(
+            cfg=cfg, dp=dp, tp=tp, dp_size=axis_size(mesh, dp), tp_size=tpn,
+            attn_heads_on_tp=heads_on_tp,
+            moe_experts_on_tp=(cfg.moe is not None
+                               and _div(cfg.moe.n_experts, tpn)),
+        )
+
+    # -- helpers ---------------------------------------------------------
+    def fsdp(self, dim: int):
+        """Shard a d_model-like dim over the data axes when it divides."""
+        return self.dp if _div(dim, self.dp_size) else None
+
+    def tpa(self, dim: int):
+        return self.tp if _div(dim, self.tp_size) else None
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+
+def _attn_specs(r: ShardingRules, stacked: bool):
+    cfg = r.cfg
+    lead = (None,) if stacked else ()
+    hd, nq, nkv, d = cfg.head_dim_, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    if r.attn_heads_on_tp:
+        q_spec = P(*lead, r.fsdp(d), r.tp, None)
+        o_spec = P(*lead, r.tp, None, r.fsdp(d))
+        bq = P(*lead, r.tp, None)
+    else:  # shard head_dim instead (granite 24H, llava 56H)
+        q_spec = P(*lead, r.fsdp(d), None, r.tpa(hd))
+        o_spec = P(*lead, None, r.tpa(hd), r.fsdp(d))
+        bq = P(*lead, None, r.tpa(hd))
+    # KV heads (GQA kv=8) rarely divide tp=16. The compute path repeats KV
+    # to flat heads (attention.py), so KV projections stay REPLICATED over
+    # tp (small: d×nkv×hd) — the repeat then slices locally per shard.
+    kv_spec = (P(*lead, r.fsdp(d), r.tp, None) if _div(nkv, r.tp_size)
+               else P(*lead, r.fsdp(d), None, None))
+    bkv = (P(*lead, r.tp, None) if _div(nkv, r.tp_size)
+           else P(*lead, None, None))
+    specs = {"wq": q_spec, "wk": kv_spec, "wv": kv_spec, "wo": o_spec}
+    if cfg.qkv_bias:
+        specs.update({"bq": bq, "bk": bkv, "bv": bkv})
+    return specs
+
+
+def _ssm_specs(r: ShardingRules, stacked: bool):
+    cfg = r.cfg
+    lead = (None,) if stacked else ()
+    d, din, nh = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads
+    din_tp = r.tpa(din)
+    nh_tp = r.tpa(nh)
+    return {
+        "wz": P(*lead, r.fsdp(d), din_tp),
+        "wx": P(*lead, r.fsdp(d), din_tp),
+        "wB": P(*lead, r.fsdp(d), None),   # B/C shared across heads
+        "wC": P(*lead, r.fsdp(d), None),
+        "wdt": P(*lead, r.fsdp(d), nh_tp),
+        "conv_x": P(*lead, None, din_tp),
+        "conv_B": P(*lead, None, None),
+        "conv_C": P(*lead, None, None),
+        "conv_bias_x": P(*lead, din_tp),
+        "conv_bias_B": P(*lead, None),
+        "conv_bias_C": P(*lead, None),
+        "A_log": P(*lead, nh_tp),
+        "D": P(*lead, nh_tp),
+        "dt_bias": P(*lead, nh_tp),
+        "norm_scale": P(*lead, din_tp),
+        "out_proj": P(*lead, din_tp, r.fsdp(d)),
+    }
+
+
+def _moe_specs(r: ShardingRules, stacked: bool):
+    cfg = r.cfg
+    lead = (None,) if stacked else ()
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    if r.moe_experts_on_tp:  # expert parallelism over the model axis
+        up = P(*lead, r.tp, r.fsdp(d), None)
+        down = P(*lead, r.tp, None, r.fsdp(d))
+    else:  # TP inside each expert (mixtral 8e, granite 40e on tp=16)
+        up = P(*lead, None, r.fsdp(d), r.tpa(f))
+        down = P(*lead, None, r.tpa(f), r.fsdp(d))
+    return {"router": P(*lead, r.fsdp(d), None),
+            "gate": up, "up": up, "down": down}
+
+
+def _mlp_specs(r: ShardingRules, stacked: bool):
+    cfg = r.cfg
+    lead = (None,) if stacked else ()
+    d, f = cfg.d_model, cfg.d_ff
+    return {"gate": P(*lead, r.fsdp(d), r.tpa(f)),
+            "up": P(*lead, r.fsdp(d), r.tpa(f)),
+            "down": P(*lead, r.tpa(f), r.fsdp(d))}
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, decode: bool = False) -> Any:
+    """PartitionSpec pytree matching ``models.model.init_params``."""
+    from repro.models.model import pattern_sig
+    r = ShardingRules.make(cfg, mesh, decode=decode)
+    vp, d = cfg.vocab_padded, cfg.d_model
+    # Embedding storage is d-sharded (vocab replicated): the token gather
+    # stays LOCAL — XLA's partitioner handles gathers on a sharded operand
+    # dim badly (verifier failure observed). The LM-head matmul wants the
+    # opposite (vocab-sharded so logits shard over tp); untied heads are
+    # stored that way, tied tables are resharded in-step (cheap all-to-all,
+    # see models.model._logits head_sharding).
+    embed = P(None, r.tpa(d))
+    head = P(r.tpa(vp), None)
+
+    blocks = {}
+    for p, (kind, mlp_kind) in enumerate(pattern_sig(cfg)):
+        lp: dict = {"norm1": {"scale": P(None, None)}}
+        if kind == "attn":
+            lp["attn"] = _attn_specs(r, stacked=True)
+        else:
+            lp["ssm"] = _ssm_specs(r, stacked=True)
+        if mlp_kind != "none":
+            lp["norm2"] = {"scale": P(None, None)}
+        if mlp_kind == "dense":
+            lp["mlp"] = _mlp_specs(r, stacked=True)
+        elif mlp_kind == "moe":
+            lp["moe"] = _moe_specs(r, stacked=True)
+        blocks[f"pos{p}"] = lp
+
+    specs = {"embed": {"table": embed}, "blocks": blocks,
+             "final_norm": {"scale": P(None)}}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"table": head}
+    return specs
+
+
+def head_pspec(cfg: ModelConfig, mesh: Mesh) -> P:
+    """The in-step resharding target for the logits matmul table."""
+    r = ShardingRules.make(cfg, mesh)
+    return P(r.tpa(cfg.vocab_padded), None)
+
+
+# ----------------------------------------------------------------------
+# Activations / caches / optimizer
+# ----------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, global_batch: int) -> P:
+    """Tokens/labels (B, S): batch over the data axes when it divides."""
+    dp = data_axes(mesh)
+    return P(dp if _div(global_batch, axis_size(mesh, dp)) else None, None)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                 decode: bool = True) -> Any:
+    """Decode-cache PartitionSpec pytree matching ``init_cache``.
+
+    Leading dim of every leaf is the layer-repeat R. Attention K/V are
+    (R, B, W, nkv, hd): batch over data when divisible, otherwise the
+    **sequence/capacity dim W** shards over data (long_500k, batch=1).
+    SSM states (R, B, nh, hp, ds): batch over data, heads over model.
+    """
+    from repro.models.model import pattern_sig
+    r = ShardingRules.make(cfg, mesh, decode=decode)
+    b_on_dp = _div(batch, r.dp_size)
+    bspec = r.dp if b_on_dp else None
+    wspec = None if b_on_dp else r.dp  # capacity shards when batch can't
+    hd_tp = r.tpa(cfg.head_dim_) if not _div(cfg.n_kv_heads, r.tp_size) else None
+    kv_tp = r.tp if _div(cfg.n_kv_heads, r.tp_size) else None
+
+    out = {}
+    for p, (kind, _) in enumerate(pattern_sig(cfg)):
+        if kind == "attn":
+            kv = P(None, bspec, wspec, kv_tp, hd_tp)
+            out[f"pos{p}"] = {"k": kv, "v": kv,
+                              "valid": P(None, bspec, wspec)}
+        else:
+            nh_tp = r.tpa(cfg.n_ssm_heads)
+            din_tp = r.tpa(cfg.d_inner)
+            out[f"pos{p}"] = {
+                "conv_x": P(None, bspec, None, din_tp),
+                "conv_B": P(None, bspec, None, None),
+                "conv_C": P(None, bspec, None, None),
+                "state": P(None, bspec, nh_tp, None, None),
+            }
+    return out
+
+
+def opt_pspecs(param_specs: Any) -> Any:
+    """Optimizer state mirrors the parameter sharding (ZeRO-for-free)."""
+    from repro.training.optimizer import OptState
+    return OptState(step=P(), master=param_specs,
+                    m=param_specs, v=param_specs)

@@ -1,0 +1,86 @@
+"""Msgpack-based checkpointing (no orbax in this environment).
+
+Stores the pytree structure as a nested msgpack document with ndarray leaves
+encoded as (dtype, shape, raw bytes). Atomic via write-to-temp + rename.
+bfloat16 round-trips through a uint16 view (numpy has no native bf16).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if str(arr.dtype) == _BF16:
+        u16 = arr.view(np.uint16)
+        return {"__nd__": True, "dtype": _BF16, "shape": list(u16.shape),
+                "data": u16.tobytes()}
+    return {"__nd__": True, "dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_leaf(d: dict):
+    if d["dtype"] == _BF16:
+        u16 = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(u16).view(jnp.bfloat16)
+    arr = np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"])
+    return jnp.asarray(arr)
+
+
+def _to_doc(tree):
+    if isinstance(tree, dict):
+        return {"__map__": {k: _to_doc(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": [_to_doc(v) for v in tree],
+                "__tuple__": isinstance(tree, tuple)}
+    if tree is None:
+        return {"__none__": True}
+    if isinstance(tree, (int, float, str, bool)):
+        return {"__py__": tree}
+    return _encode_leaf(tree)
+
+
+def _from_doc(doc):
+    if "__map__" in doc:
+        return {k: _from_doc(v) for k, v in doc["__map__"].items()}
+    if "__seq__" in doc:
+        seq = [_from_doc(v) for v in doc["__seq__"]]
+        return tuple(seq) if doc.get("__tuple__") else seq
+    if "__none__" in doc:
+        return None
+    if "__py__" in doc:
+        return doc["__py__"]
+    return _decode_leaf(doc)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    doc = {"version": 1, "step": step, "metadata": metadata or {},
+           "tree": _to_doc(jax.device_get(tree))}
+    payload = msgpack.packb(doc, use_bin_type=True)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str):
+    with open(path, "rb") as f:
+        doc = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    assert doc["version"] == 1
+    return _from_doc(doc["tree"]), doc["step"], doc["metadata"]

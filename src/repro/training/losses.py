@@ -1,0 +1,24 @@
+"""Next-token / next-item cross-entropy with padded-vocab + validity masking."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, valid=None):
+    """logits (B,S,Vp) fp32 (padded vocab already masked to -inf);
+    labels (B,S) int32; valid (B,S) bool. Returns (mean loss, accuracy)."""
+    # one-hot contraction instead of take_along_axis: under GSPMD it
+    # partitions cleanly over vocab-sharded logits (a gather on the sharded
+    # dim would force an all-gather of the full logits tensor).
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    lab = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - lab
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if valid is None:
+        return nll.mean(), hit.mean()
+    w = valid.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    return (nll * w).sum() / denom, (hit * w).sum() / denom

@@ -1,0 +1,106 @@
+"""Pure-JAX AdamW with fp32 master weights, grad clipping and schedules.
+
+Optimizer state is a pytree shaped like the params (sharded identically by
+the dry-run's sharding rules — fully-sharded optimizer à la ZeRO comes free
+from GSPMD since master/m/v inherit the param PartitionSpecs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    master: Any  # fp32 copy of params
+    m: Any
+    v: Any
+
+
+def lr_schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> OptState:
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _is_matrix(path) -> bool:
+    """Weight decay applies to matrices only (not norms/biases/A_log/D)."""
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return name not in ("scale", "norm_scale", "A_log", "D", "dt_bias",
+                        "bq", "bk", "bv", "conv_bias_x", "conv_bias_B",
+                        "conv_bias_C")
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt: OptState, param_dtype=jnp.bfloat16):
+    """Returns (new_params, new_opt_state, stats)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = opt.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, g, p32, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _is_matrix(path):
+            delta = delta + cfg.weight_decay * p32
+        return p32 - lr * delta, m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(grads)[0]
+    paths = [p for p, _ in flat]
+    treedef = jax.tree.structure(grads)
+    g_l = [g for _, g in flat]
+    p_l = jax.tree.leaves(opt.master)
+    m_l = jax.tree.leaves(opt.m)
+    v_l = jax.tree.leaves(opt.v)
+    new = [upd(path, g, p, m, v) for path, g, p, m, v
+           in zip(paths, g_l, p_l, m_l, v_l)]
+    master = jax.tree.unflatten(treedef, [n[0] for n in new])
+    m_t = jax.tree.unflatten(treedef, [n[1] for n in new])
+    v_t = jax.tree.unflatten(treedef, [n[2] for n in new])
+    params = jax.tree.map(lambda p: p.astype(param_dtype), master)
+    return params, OptState(step, master, m_t, v_t), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,106 @@
+"""Train-step factory: remat'd forward, microbatch gradient accumulation,
+AdamW — the function the multi-pod dry-run lowers for ``train_4k``."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward
+from repro.training.losses import cross_entropy
+from repro.training.optimizer import AdamWConfig, OptState, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    # global_batch is split into `microbatches` sequential accumulation steps
+    microbatches: int = 1
+    remat: bool = True
+    q_chunk: int = 512
+    param_dtype: Any = jnp.bfloat16
+    # distribution: NamedShardings applied inside the step (layer-boundary
+    # activations and the logits tensor) — None on a single device.
+    act_sharding: Any = None
+    logits_sharding: Any = None
+    head_sharding: Any = None
+    embed_mesh: Any = None
+    head_pad_to: int = 0
+    attn_sharding: Any = None
+    moe_sharding: Any = None
+
+
+def make_loss_fn(model_cfg: ModelConfig, train_cfg: TrainConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits, aux = forward(
+            params, model_cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            valid=batch.get("valid"), remat=train_cfg.remat,
+            q_chunk=train_cfg.q_chunk,
+            act_sharding=train_cfg.act_sharding,
+            logits_sharding=train_cfg.logits_sharding,
+            head_sharding=train_cfg.head_sharding,
+            embed_mesh=train_cfg.embed_mesh,
+            head_pad_to=train_cfg.head_pad_to,
+            attn_sharding=train_cfg.attn_sharding,
+            moe_sharding=train_cfg.moe_sharding)
+        loss, acc = cross_entropy(logits, batch["labels"],
+                                  batch.get("loss_mask", batch.get("valid")))
+        return loss + aux, {"loss": loss, "acc": acc, "moe_aux": aux}
+    return loss_fn
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig) -> Callable:
+    loss_fn = make_loss_fn(model_cfg, train_cfg)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt: OptState, batch):
+        nm = train_cfg.microbatches
+        if nm == 1:
+            grads, metrics = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def split(x):
+                return x.reshape((nm, x.shape[0] // nm) + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mz = {"loss": jnp.zeros((), jnp.float32),
+                  "acc": jnp.zeros((), jnp.float32),
+                  "moe_aux": jnp.zeros((), jnp.float32)}
+
+            def body(carry, mb):
+                gacc, macc = carry
+                g, m = grad_fn(params, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gacc, g)
+                macc = jax.tree.map(lambda a, b: a + b, macc, m)
+                return (gacc, macc), None
+
+            (grads, msum), _ = jax.lax.scan(body, (gz, mz), micro)
+            grads = jax.tree.map(lambda g: g / nm, grads)
+            metrics = jax.tree.map(lambda m: m / nm, msum)
+
+        params, opt, stats = adamw_update(
+            train_cfg.adamw, grads, opt, train_cfg.param_dtype)
+        return params, opt, {**metrics, **stats}
+
+    return train_step
+
+
+def train(model_cfg: ModelConfig, train_cfg: TrainConfig, params,
+          opt: OptState, batches, *, log_every: int = 20,
+          log: Optional[Callable[[str], None]] = print) -> Dict[str, Any]:
+    """Simple host loop over an iterable of batches. Returns final state."""
+    step_fn = jax.jit(make_train_step(model_cfg, train_cfg))
+    history = []
+    for i, batch in enumerate(batches):
+        params, opt, metrics = step_fn(params, opt, batch)
+        if log and (i % log_every == 0):
+            m = {k: float(v) for k, v in metrics.items()}
+            log(f"step {i:5d} loss={m['loss']:.4f} acc={m['acc']:.4f} "
+                f"gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e}")
+        history.append({k: float(v) for k, v in metrics.items()})
+    return {"params": params, "opt": opt, "history": history}

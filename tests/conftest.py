@@ -1,0 +1,9 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run against the single real CPU device — the 512-device trick is
+# strictly local to launch/dryrun.py (see the system design notes).
+assert "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "dryrun XLA_FLAGS must not leak into the test environment"

@@ -1,0 +1,46 @@
+"""End-to-end A/B harness machinery test (micro-scale).
+
+Validates the full phase structure — bootstrap logs → gen-1 training +
+deployment (feedback loop) → gen-2 batch/consistent training → paired
+arms — without asserting effect sizes (that's the full experiment in
+examples/ab_experiment.py; see EXPERIMENTS.md §Paper-claims).
+"""
+import numpy as np
+import pytest
+
+from repro.core.ab import ABConfig, run_experiment
+from repro.data.synthetic import WorldConfig
+
+
+@pytest.fixture(scope="module")
+def report():
+    ab = ABConfig(
+        world=WorldConfig(n_users=50, n_items=250, sessions_per_day=1.5,
+                          seed=0),
+        bootstrap_days=2, gen1_days=1, ab_days=2, feature_len=24,
+        train_epochs=1, train_batch=32, max_examples=1500,
+        latency_arms=(3600,))
+    return run_experiment(ab, log=None)
+
+
+def test_all_arms_present(report):
+    assert set(report["arms"]) == {"control", "treatment", "consistent",
+                                   "stale_3600s"}
+
+
+def test_paired_impressions_identical(report):
+    """Common random numbers: every arm faces the same impressions."""
+    imps = {a["impressions"] for a in report["arms"].values()}
+    assert len(imps) == 1
+
+
+def test_tests_structure(report):
+    t = report["tests"]["treatment_vs_control"]
+    for key in ("lift", "ci_lo", "ci_hi", "p_t", "significant", "z_pooled"):
+        assert key in t
+    assert t["ci_lo"] <= t["lift"] <= t["ci_hi"]
+
+
+def test_ctrs_in_sane_range(report):
+    for a in report["arms"].values():
+        assert 0.0 < a["ctr"] < 0.9

@@ -1,0 +1,89 @@
+"""Config registry: the 10 assigned architectures + shapes."""
+import pytest
+
+from repro.configs.archs import ASSIGNED
+from repro.configs.base import get_config, list_configs, pad_vocab, reduced
+from repro.configs.shapes import SHAPES, get_shape
+
+EXPECTED = {
+    "mamba2-780m": dict(n_layers=48, d_model=1536, vocab_size=50280),
+    "granite-moe-3b-a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                 n_kv_heads=8, d_ff=512, vocab_size=49155),
+    "llama3.2-1b": dict(n_layers=16, d_model=2048, n_heads=32, n_kv_heads=8,
+                        d_ff=8192, vocab_size=128256),
+    "mixtral-8x22b": dict(n_layers=56, d_model=6144, n_heads=48,
+                          n_kv_heads=8, d_ff=16384, vocab_size=32768),
+    "musicgen-large": dict(n_layers=48, d_model=2048, n_heads=32,
+                           n_kv_heads=32, d_ff=8192, vocab_size=2048),
+    "codeqwen1.5-7b": dict(n_layers=32, d_model=4096, n_heads=32,
+                           n_kv_heads=32, d_ff=13440, vocab_size=92416),
+    "command-r-plus-104b": dict(n_layers=64, d_model=12288, n_heads=96,
+                                n_kv_heads=8, d_ff=33792, vocab_size=256000),
+    "llava-next-34b": dict(n_layers=60, d_model=7168, n_heads=56,
+                           n_kv_heads=8, d_ff=20480, vocab_size=64000),
+    "jamba-v0.1-52b": dict(n_layers=32, d_model=4096, n_heads=32,
+                           n_kv_heads=8, d_ff=14336, vocab_size=65536),
+    "deepseek-67b": dict(n_layers=95, d_model=8192, n_heads=64,
+                         n_kv_heads=8, d_ff=22016, vocab_size=102400),
+}
+
+# hyperparameters straight from the assignment
+MOE = {"granite-moe-3b-a800m": (40, 8), "mixtral-8x22b": (8, 2),
+       "jamba-v0.1-52b": (16, 2)}
+
+
+def test_all_assigned_registered():
+    for a in ASSIGNED:
+        assert a in list_configs()
+    assert len(ASSIGNED) == 10
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_exact_assigned_hparams(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+    if arch in MOE:
+        assert (cfg.moe.n_experts, cfg.moe.top_k) == MOE[arch]
+    cfg.validate()
+
+
+def test_families_span_six_types():
+    fams = {get_config(a).family for a in ASSIGNED}
+    assert fams == {"ssm", "moe", "dense", "audio", "vlm", "hybrid"}
+
+
+@pytest.mark.parametrize("arch,approx_b", [
+    ("mamba2-780m", 0.78), ("llama3.2-1b", 1.24), ("mixtral-8x22b", 141.0),
+    ("deepseek-67b", 67.0), ("command-r-plus-104b", 104.0),
+    ("jamba-v0.1-52b", 52.0),
+])
+def test_param_counts_match_names(arch, approx_b):
+    n = get_config(arch).param_count() / 1e9
+    assert approx_b * 0.7 < n < approx_b * 1.4, f"{arch}: {n:.1f}B"
+
+
+def test_active_params_moe():
+    cfg = get_config("mixtral-8x22b")
+    # 8x22b: ~39B active of ~141B total
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()
+
+
+def test_reduced_configs_are_small():
+    for a in ASSIGNED:
+        r = reduced(get_config(a))
+        assert r.n_layers == 2 and r.d_model <= 512
+        if r.moe:
+            assert r.moe.n_experts <= 4
+        r.validate()
+
+
+def test_shapes():
+    assert get_shape("train_4k").tokens == 4096 * 256
+    assert get_shape("long_500k").seq_len == 524288
+    assert {s.kind for s in SHAPES.values()} == {"train", "prefill", "decode"}
+
+
+def test_pad_vocab():
+    assert pad_vocab(49155) == 49408
+    assert pad_vocab(256) == 256

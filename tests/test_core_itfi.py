@@ -1,0 +1,139 @@
+"""Core ITFI behaviour: batch staleness, realtime visibility, injection
+semantics (paper §III)."""
+import numpy as np
+import pytest
+
+from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+from repro.core.injection import FeatureInjector, InjectionConfig
+from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+
+DAY = 86400
+
+
+def _store(n_users=4, k=8):
+    return BatchFeatureStore(FeatureStoreConfig(n_users=n_users,
+                                                feature_len=k))
+
+
+def test_batch_features_are_stale_until_snapshot():
+    st = _store()
+    st.append(0, 11, ts=100)
+    st.run_snapshot(DAY)          # midnight job
+    st.append(0, 22, ts=DAY + 50)  # today's watch — invisible until tomorrow
+    items, ts, valid = st.lookup(np.array([0]), now=DAY + 100)
+    got = [int(i) for i, v in zip(items[0], valid[0]) if v]
+    assert got == [11], "daily snapshot must not see same-day events"
+    st.run_snapshot(2 * DAY)
+    items, ts, valid = st.lookup(np.array([0]), now=2 * DAY + 1)
+    got = [int(i) for i, v in zip(items[0], valid[0]) if v]
+    assert got == [11, 22]
+
+
+def test_snapshot_scheduler_idempotent():
+    st = _store()
+    st.append(1, 5, ts=10)
+    st.maybe_run_due_snapshots(DAY + 5)
+    st.maybe_run_due_snapshots(DAY + 9)
+    assert len(st._snapshot_times) == 1
+    st.maybe_run_due_snapshots(3 * DAY + 1)  # catches up day 2 and 3
+    assert st._snapshot_times == [DAY, 2 * DAY, 3 * DAY]
+
+
+def test_lookup_at_cutoff_matches_snapshot():
+    st = _store()
+    for t, it in [(10, 1), (20, 2), (DAY + 5, 3)]:
+        st.append(0, it, t)
+    st.run_snapshot(DAY)
+    a = st.lookup(np.array([0]), now=DAY + 50)
+    b = st.lookup_at_cutoff(np.array([0]), cutoff=DAY)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_realtime_ingest_latency_and_retention():
+    rt = RealtimeFeatureService(RealtimeConfig(
+        n_users=2, buffer_len=8, ingest_latency=30, retention=3600))
+    rt.ingest(0, 7, ts=1000)
+    # not yet visible (stream delay)
+    items, _, valid = rt.lookup(np.array([0]), now=1010)
+    assert valid.sum() == 0
+    items, _, valid = rt.lookup(np.array([0]), now=1030)
+    assert valid.sum() == 1 and items[0, -1] == 7
+    # falls out of the short retention window
+    _, _, valid = rt.lookup(np.array([0]), now=1000 + 3601)
+    assert valid.sum() == 0
+
+
+def test_realtime_bounded_buffer():
+    rt = RealtimeFeatureService(RealtimeConfig(n_users=1, buffer_len=4,
+                                               ingest_latency=0))
+    for i in range(10):
+        rt.ingest(0, i, ts=100 + i)
+    items, _, valid = rt.lookup(np.array([0]), now=1000)
+    got = [int(x) for x, v in zip(items[0], valid[0]) if v]
+    assert got == [6, 7, 8, 9]  # only the freshest buffer_len
+
+
+def _wired(policy, k=8):
+    st = _store(k=k)
+    rt = RealtimeFeatureService(RealtimeConfig(n_users=4, buffer_len=4,
+                                               ingest_latency=30))
+    inj = FeatureInjector(InjectionConfig(policy=policy, feature_len=k), st, rt)
+    return st, rt, inj
+
+
+def test_injection_merges_batch_and_fresh():
+    st, rt, inj = _wired("inject")
+    st.append(0, 1, ts=100)
+    st.append(0, 2, ts=200)
+    st.run_snapshot(DAY)
+    rt.ingest(0, 3, ts=DAY + 100)
+    items, ts, valid = inj.features(np.array([0]), now=DAY + 200)
+    got = [int(i) for i, v in zip(items[0], valid[0]) if v]
+    assert got == [1, 2, 3], "fresh event must be appended after batch"
+
+
+def test_injection_dedups_rewatch():
+    """Re-watching a batch-history item keeps only the fresh occurrence."""
+    st, rt, inj = _wired("inject")
+    for t, it in [(100, 1), (200, 2), (300, 3)]:
+        st.append(0, it, t)
+    st.run_snapshot(DAY)
+    rt.ingest(0, 2, ts=DAY + 10)  # re-watch item 2
+    items, ts, valid = inj.features(np.array([0]), now=DAY + 100)
+    got = [(int(i), int(t)) for i, t, v in
+           zip(items[0], ts[0], valid[0]) if v]
+    assert got == [(1, 100), (3, 300), (2, DAY + 10)]
+
+
+def test_control_policy_ignores_fresh():
+    st, rt, inj = _wired("batch")
+    st.append(0, 1, ts=100)
+    st.run_snapshot(DAY)
+    rt.ingest(0, 9, ts=DAY + 10)
+    items, _, valid = inj.features(np.array([0]), now=DAY + 100)
+    got = [int(i) for i, v in zip(items[0], valid[0]) if v]
+    assert got == [1]
+
+
+def test_staleness_override_for_latency_ablation():
+    st, rt, inj = _wired("batch")
+    inj = FeatureInjector(InjectionConfig(policy="batch", feature_len=8,
+                                          staleness=3600), st, rt)
+    st.append(0, 1, ts=100)
+    st.append(0, 2, ts=DAY + 100)  # 2h before the request below
+    items, _, valid = inj.features(np.array([0]), now=DAY + 100 + 7200)
+    got = [int(i) for i, v in zip(items[0], valid[0]) if v]
+    assert got == [1, 2], "1h-stale pipeline must see the 2h-old event"
+
+
+def test_at_least_once_redelivery_harmless():
+    """Stream redelivery (at-least-once) must not duplicate history items."""
+    st, rt, inj = _wired("inject")
+    st.append(0, 1, ts=100)
+    st.run_snapshot(DAY)
+    for _ in range(3):  # redelivered 3x
+        rt.ingest(0, 5, ts=DAY + 10)
+    items, _, valid = inj.features(np.array([0]), now=DAY + 100)
+    got = [int(i) for i, v in zip(items[0], valid[0]) if v]
+    assert got == [1, 5]

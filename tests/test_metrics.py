@@ -1,0 +1,42 @@
+"""A/B statistics: significance tests behave correctly on known inputs."""
+import numpy as np
+
+from repro.core.metrics import paired_user_test, two_proportion_z
+
+
+def test_z_test_detects_large_lift():
+    z, p = two_proportion_z(3500, 10000, 3000, 10000)
+    assert z > 5 and p < 1e-6
+
+
+def test_z_test_null_case():
+    z, p = two_proportion_z(3000, 10000, 3000, 10000)
+    assert abs(z) < 1e-9 and p > 0.99
+
+
+def _paired_data(lift, n_users=400, seed=0):
+    rng = np.random.RandomState(seed)
+    imp = rng.poisson(30, n_users) + 1
+    base = np.clip(rng.normal(0.3, 0.05, n_users), 0.05, 0.9)
+    cw = rng.binomial(imp, base)
+    tw = rng.binomial(imp, np.clip(base * (1 + lift), 0, 1))
+    return tw, imp.copy(), cw, imp.copy()
+
+
+def test_paired_detects_real_lift():
+    r = paired_user_test(*_paired_data(0.10))
+    assert r["significant"] and r["lift"] > 0.05
+    assert r["ci_lo"] > 0
+
+
+def test_paired_null_not_significant():
+    # nominal 5% false-positive rate; P(>5 of 20 | p=.05) < 0.03%
+    hits = sum(paired_user_test(*_paired_data(0.0, seed=s),
+                                n_boot=500)["significant"]
+               for s in range(20))
+    assert hits <= 5
+
+
+def test_paired_ci_contains_truth():
+    r = paired_user_test(*_paired_data(0.10, n_users=2000))
+    assert r["ci_lo"] <= 0.10 <= r["ci_hi"] + 0.02

@@ -1,0 +1,131 @@
+"""Model-level consistency: prefill+decode == forward, extend == full,
+sliding-window ring semantics, pad-invariance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models.model import (cache_from_prefill, decode_step, extend,
+                                forward, init_cache, init_params, prefill)
+
+FAMS = ["llama3.2-1b", "mamba2-780m", "jamba-v0.1-52b", "mixtral-8x22b",
+        "granite-moe-3b-a800m", "codeqwen1.5-7b"]
+
+
+def _cfg(arch):
+    cfg = reduced(get_config(arch))
+    if cfg.moe:  # capacity dropping is seq-length dependent; disable for
+        cfg = dataclasses.replace(cfg, moe=cfg.moe.no_drop())  # consistency
+    return cfg
+
+
+def _params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = _cfg(arch)
+    params = _params(cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full, _ = forward(params, cfg, toks)
+    _, caches = prefill(params, cfg, toks[:, :S - 1])
+    dc = cache_from_prefill(cfg, caches, capacity=64)
+    dec, _ = decode_step(params, cfg, dc, toks[:, S - 1:],
+                         jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(dec[:, 0]),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_extend_matches_full_prefill(arch):
+    """The injection path: prefix cache + suffix == one full pass."""
+    cfg = _cfg(arch)
+    params = _params(cfg)
+    B, S, SP = 2, 16, 10
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    full, _ = forward(params, cfg, toks)
+    _, pc = prefill(params, cfg, toks[:, :SP])
+    ext, _ = extend(params, cfg, pc, toks[:, SP:],
+                    jnp.full((B,), SP, jnp.int32))
+    np.testing.assert_allclose(np.asarray(full[:, SP:]), np.asarray(ext),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_multi_step_decode(arch):
+    cfg = _cfg(arch)
+    params = _params(cfg)
+    B, S, ND = 2, 12, 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S + ND), 0,
+                              cfg.vocab_size)
+    full, _ = forward(params, cfg, toks)
+    _, caches = prefill(params, cfg, toks[:, :S])
+    dc = cache_from_prefill(cfg, caches, capacity=64)
+    for i in range(ND):
+        dec, dc = decode_step(params, cfg, dc, toks[:, S + i: S + i + 1],
+                              jnp.full((B,), S + i, jnp.int32))
+        np.testing.assert_allclose(np.asarray(full[:, S + i]),
+                                   np.asarray(dec[:, 0]),
+                                   atol=3e-4, rtol=3e-4)
+
+
+def test_sliding_window_matches_full_when_window_covers():
+    base = _cfg("llama3.2-1b")
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 24), 0,
+                              base.vocab_size)
+    params = _params(base)
+    full, _ = forward(params, base, toks)
+    swa = dataclasses.replace(base, sliding_window=64)  # window > seq
+    out, _ = forward(params, swa, toks)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(out), atol=1e-5)
+
+
+def test_sliding_window_changes_output_when_smaller():
+    base = _cfg("llama3.2-1b")
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 24), 0,
+                              base.vocab_size)
+    params = _params(base)
+    full, _ = forward(params, base, toks)
+    swa = dataclasses.replace(base, sliding_window=4)
+    out, _ = forward(params, swa, toks)
+    assert float(jnp.max(jnp.abs(full[:, -1] - out[:, -1]))) > 1e-3
+
+
+def test_swa_ring_decode_matches_swa_forward():
+    """Ring cache of capacity=window reproduces sliding-window attention."""
+    cfg = dataclasses.replace(_cfg("llama3.2-1b"), sliding_window=8)
+    params = _params(cfg)
+    B, S = 2, 20
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab_size)
+    full, _ = forward(params, cfg, toks)
+    _, caches = prefill(params, cfg, toks[:, :S - 1])
+    dc = cache_from_prefill(cfg, caches, capacity=1024)  # clamps to window=8
+    assert dc["pos0"]["k"].shape[2] == 8
+    dec, _ = decode_step(params, cfg, dc, toks[:, S - 1:],
+                         jnp.full((B,), S - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(dec[:, 0]),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-780m",
+                                  "jamba-v0.1-52b"])
+def test_left_pad_invariance(arch):
+    """Left-padded batch rows produce the same last-token logits as the
+    unpadded sequence (attention masks + SSM identity steps)."""
+    cfg = _cfg(arch)
+    params = _params(cfg)
+    S, PAD = 12, 5
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, S), 1, cfg.vocab_size)
+    ref, _ = forward(params, cfg, toks)
+    padded = jnp.concatenate(
+        [jnp.zeros((1, PAD), jnp.int32), toks], axis=1)
+    valid = jnp.concatenate(
+        [jnp.zeros((1, PAD), bool), jnp.ones((1, S), bool)], axis=1)
+    out, _ = forward(params, cfg, padded, valid=valid)
+    np.testing.assert_allclose(np.asarray(ref[0, -1]), np.asarray(out[0, -1]),
+                               atol=2e-4, rtol=2e-4)

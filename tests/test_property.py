@@ -1,0 +1,103 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import two_proportion_z
+from repro.kernels.history_merge.ops import history_merge
+from repro.kernels.history_merge.ref import history_merge_python
+from repro.models.ssm import _segsum
+from repro.training.optimizer import AdamWConfig, lr_schedule
+
+events = st.lists(
+    st.tuples(st.integers(0, 15), st.integers(0, 500)), min_size=0,
+    max_size=20)
+
+
+@settings(max_examples=40, deadline=None)
+@given(batch=events, rt=events, k=st.integers(1, 24))
+def test_history_merge_properties(batch, rt, k):
+    """Kernel output == plain-python oracle, for arbitrary event lists —
+    covers duplicates within a buffer, ties, empty buffers, truncation."""
+    lb, lr = max(len(batch), 1), max(len(rt), 1)
+    bi = np.zeros((1, lb), np.int32); bt = np.zeros((1, lb), np.int32)
+    bv = np.zeros((1, lb), np.int32)
+    for i, (it, t) in enumerate(batch):
+        bi[0, i], bt[0, i], bv[0, i] = it, t, 1
+    ri = np.zeros((1, lr), np.int32); rtt = np.zeros((1, lr), np.int32)
+    rv = np.zeros((1, lr), np.int32)
+    for i, (it, t) in enumerate(rt):
+        ri[0, i], rtt[0, i], rv[0, i] = it, t, 1
+    oi, ot, ov = history_merge(*(jnp.asarray(a) for a in
+                                 (bi, bt, bv, ri, rtt, rv)),
+                               out_len=k, impl="xla")
+    got = [(int(i), int(t)) for i, t, v in zip(oi[0], ot[0], ov[0]) if v]
+    want = history_merge_python(batch, rt, k)
+    assert got == want
+
+    # invariants: unique items, ascending ts, bounded length
+    items = [i for i, _ in got]
+    assert len(set(items)) == len(items)
+    assert all(got[i][1] <= got[i + 1][1] for i in range(len(got) - 1))
+    assert len(got) <= k
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-3, 3), min_size=1, max_size=12))
+def test_segsum_telescopes(xs):
+    """segsum[i,j] == sum over (j, i] — the SSD decay-matrix invariant."""
+    x = jnp.asarray(xs, jnp.float32)
+    out = np.asarray(_segsum(x))
+    n = len(xs)
+    cs = np.concatenate([[0.0], np.cumsum(np.asarray(xs, np.float64))])
+    for i in range(n):
+        for j in range(n):
+            if j <= i:
+                np.testing.assert_allclose(out[i, j], cs[i + 1] - cs[j + 1],
+                                           atol=1e-4)
+            else:
+                assert out[i, j] == -np.inf
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 10000), st.integers(1, 400))
+def test_lr_schedule_bounds(total, step):
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=100, total_steps=max(total, 200),
+                      min_lr_ratio=0.1)
+    lr = float(lr_schedule(cfg, jnp.asarray(step)))
+    assert 0.0 <= lr <= cfg.lr + 1e-12
+    if step >= cfg.warmup_steps:
+        assert lr >= cfg.lr * cfg.min_lr_ratio - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 500), st.integers(1, 500), st.integers(0, 500),
+       st.integers(1, 500))
+def test_two_proportion_z_symmetry(x1, n1, x2, n2):
+    x1, x2 = min(x1, n1), min(x2, n2)
+    z1, p1 = two_proportion_z(x1, n1, x2, n2)
+    z2, p2 = two_proportion_z(x2, n2, x1, n1)
+    np.testing.assert_allclose(z1, -z2, atol=1e-9)
+    np.testing.assert_allclose(p1, p2, atol=1e-9)
+    assert 0.0 <= p1 <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 29), st.integers(0, 3))
+def test_ring_cache_layout(s, cap, shift_seed):
+    """cache_from_prefill reproduces the slot = pos % capacity layout."""
+    from repro.models.attention import cache_from_prefill
+    cap = min(cap, s + 4)
+    k = jnp.arange(s, dtype=jnp.float32)[None, :, None, None]
+    k = jnp.broadcast_to(k, (1, s, 2, 4))
+    out = cache_from_prefill({"k": k, "v": k}, cap)
+    kk = np.asarray(out["k"][0, :, 0, 0])
+    if s >= cap:
+        # slot i holds position p with p % cap == i, p in [s-cap, s)
+        for i in range(cap):
+            p = int(kk[i])
+            assert p % cap == i and s - cap <= p < s
+    else:
+        np.testing.assert_array_equal(kk[:s], np.arange(s))
+        assert bool(np.asarray(out["valid"])[0, s:].any()) is False
