@@ -2,6 +2,7 @@
 microbenches and the roofline aggregation.
 
   PYTHONPATH=src python -m benchmarks.run [--only SECTION]
+  PYTHONPATH=src python benchmarks/run.py --suite feature_plane [--smoke]
 
 Sections
   ab_lift            paper §IV: A/B lift table (reads experiments/ab_report.json)
@@ -10,6 +11,9 @@ Sections
   serving_phases     prefill vs inject vs decode cost (O(suffix) claim)
   kernel_micro       Pallas-kernel oracle timings (XLA path on CPU)
   roofline           aggregate dry-run JSONs into the §Roofline table
+  feature_plane      vectorized EventLog stores vs the loop reference
+                     (snapshot materialization + batched lookups at
+                     1k/100k/1M users; writes BENCH_feature_plane.json)
 """
 from __future__ import annotations
 
@@ -161,6 +165,142 @@ def bench_kernel_micro():
 
 
 # ----------------------------------------------------------------------
+DAY = 86400
+
+
+def _time_once(fn, *args, repeat=3):
+    """Best-of-N wall time for host-side (numpy) work."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_feature_plane(smoke: bool = False, out_path: str = None):
+    """Vectorized array-backed feature plane vs the retired loop reference.
+
+    Measures, per population size:
+      * full-population snapshot materialization (``run_snapshot``)
+      * batched ``lookup_at_cutoff`` (4096 users)
+      * realtime ``lookup`` (256-user serve batch)
+      * the serving loop's interleaved pattern — alternating 256-event
+        ingest with 256-user realtime + cutoff lookups (reads racing an
+        unsorted pending suffix), 50 rounds
+    The loop reference is only timed up to 100k users (1M would take
+    minutes per snapshot — which is the point of this refactor).
+    """
+    print("\n== feature_plane (vectorized EventLog vs loop reference) ==")
+    from repro.core._reference import (ReferenceBatchFeatureStore,
+                                       ReferenceRealtimeFeatureService)
+    from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+
+    sizes = [(1_000, 16), (10_000, 8)] if smoke \
+        else [(1_000, 32), (100_000, 32), (1_000_000, 8)]
+    ref_limit = 100_000
+    cutoff = 15 * DAY
+
+    def interleaved(batch_store, rt_service, rng, rounds=50):
+        """The serve pattern: observe a wave of events, then look up."""
+        n_users = batch_store.cfg.n_users
+        for r in range(rounds):
+            u = rng.randint(0, n_users, 256)
+            it = rng.randint(0, 50_000, 256)
+            t = np.full(256, cutoff + r * 60)
+            for x, y, z in zip(u.tolist(), it.tolist(), t.tolist()):
+                batch_store.append(x, y, z)
+                rt_service.ingest(x, y, z)
+            now = cutoff + r * 60 + 30
+            rt_service.lookup(u, now)
+            batch_store.lookup_at_cutoff(u, now)
+
+    results = []
+    print(f"  {'users':>9s} {'events':>9s} {'snap(vec)':>10s} "
+          f"{'snap(ref)':>10s} {'speedup':>8s} {'lookup4k(vec)':>14s} "
+          f"{'lookup4k(ref)':>14s} {'rt256(vec)':>11s} "
+          f"{'serve50(vec)':>13s} {'serve50(ref)':>13s}")
+    for n_users, ev_per_user in sizes:
+        rng = np.random.RandomState(0)
+        n = n_users * ev_per_user
+        users = rng.randint(0, n_users, n).astype(np.int64)
+        items = rng.randint(0, 50_000, n).astype(np.int32)
+        tss = rng.randint(0, 30 * DAY, n).astype(np.int64)
+
+        store = BatchFeatureStore(FeatureStoreConfig(
+            n_users=n_users, feature_len=64))
+        store.extend(users, items, tss)
+        # first snapshot pays the lazy index rebuild — charge it honestly
+        t_snap_vec, _ = _time_once(store.run_snapshot, cutoff, repeat=1)
+        t2, _ = _time_once(store.run_snapshot, cutoff + DAY, repeat=1)
+        t_snap_vec = min(t_snap_vec, t2)
+        q4k = rng.randint(0, n_users, 4096)
+        t_lkp_vec, _ = _time_once(store.lookup_at_cutoff, q4k, cutoff)
+
+        rts = RealtimeFeatureService(RealtimeConfig(
+            n_users=n_users, buffer_len=16, ingest_latency=0,
+            retention=30 * DAY))
+        rts.extend(users, items, tss)
+        q256 = rng.randint(0, n_users, 256)
+        t_rt_vec, _ = _time_once(rts.lookup, q256, cutoff)
+
+        t_snap_ref = t_lkp_ref = t_serve_ref = None
+        if n_users <= ref_limit:
+            ref = ReferenceBatchFeatureStore(FeatureStoreConfig(
+                n_users=n_users, feature_len=64))
+            for u, it, t in zip(users.tolist(), items.tolist(), tss.tolist()):
+                ref.append(u, it, t)
+            t_snap_ref, _ = _time_once(ref.run_snapshot, cutoff, repeat=1)
+            t_lkp_ref, _ = _time_once(ref.lookup_at_cutoff, q4k, cutoff,
+                                      repeat=1)
+            rref = ReferenceRealtimeFeatureService(RealtimeConfig(
+                n_users=n_users, buffer_len=16, ingest_latency=0,
+                retention=30 * DAY))
+            for u, it, t in zip(users.tolist(), items.tolist(), tss.tolist()):
+                rref.ingest(u, it, t)
+            # correctness spot-check rides along with the timing run
+            for a, b in zip(store.lookup_at_cutoff(q4k, cutoff),
+                            ref.lookup_at_cutoff(q4k, cutoff)):
+                np.testing.assert_array_equal(a, b)
+            for a, b in zip(rts.lookup(q256, cutoff),
+                            rref.lookup(q256, cutoff)):
+                np.testing.assert_array_equal(a, b)
+            t_serve_ref, _ = _time_once(
+                interleaved, ref, rref, np.random.RandomState(1), repeat=1)
+        # interleaved timing mutates the stores — run it last
+        t_serve_vec, _ = _time_once(
+            interleaved, store, rts, np.random.RandomState(1), repeat=1)
+        speedup = t_snap_ref / t_snap_vec if t_snap_ref else None
+        results.append({
+            "n_users": n_users, "n_events": n,
+            "snapshot_vec_s": t_snap_vec, "snapshot_ref_s": t_snap_ref,
+            "snapshot_speedup": speedup,
+            "lookup4096_vec_s": t_lkp_vec, "lookup4096_ref_s": t_lkp_ref,
+            "realtime256_vec_s": t_rt_vec,
+            "interleaved50_vec_s": t_serve_vec,
+            "interleaved50_ref_s": t_serve_ref,
+        })
+        fmt = lambda v, w: f"{v*1e3:{w}.2f}ms" if v is not None else " " * w + "--"
+        print(f"  {n_users:9d} {n:9d} {fmt(t_snap_vec, 8)} "
+              f"{fmt(t_snap_ref, 8)} "
+              f"{speedup and f'{speedup:7.1f}x' or '     --'} "
+              f"{fmt(t_lkp_vec, 12)} {fmt(t_lkp_ref, 12)} "
+              f"{fmt(t_rt_vec, 9)} {fmt(t_serve_vec, 11)} "
+              f"{fmt(t_serve_ref, 11)}")
+    # smoke runs get their own file so they never clobber the committed
+    # full-size record
+    default_name = ("BENCH_feature_plane_smoke.json" if smoke
+                    else "BENCH_feature_plane.json")
+    out_path = out_path or os.path.join(ROOT, default_name)
+    with open(out_path, "w") as f:
+        json.dump({"suite": "feature_plane", "smoke": smoke,
+                   "results": results}, f, indent=2)
+    print(f"  wrote {os.path.abspath(out_path)}")
+    return results
+
+
+# ----------------------------------------------------------------------
 def bench_roofline():
     print("\n== roofline (dry-run artifacts; baseline -> optimized §Perf) ==")
     files = sorted(glob.glob(os.path.join(ROOT, "experiments", "dryrun",
@@ -202,17 +342,30 @@ SECTIONS = {
     "serving_phases": bench_serving_phases,
     "kernel_micro": bench_kernel_micro,
     "roofline": bench_roofline,
+    "feature_plane": bench_feature_plane,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    ap.add_argument("--suite", default=None, choices=sorted(SECTIONS),
+                    help="run a single suite (alias of --only)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes for CI (feature_plane only)")
+    ap.add_argument("--out", default=None,
+                    help="output path for suites that write a BENCH json")
     args = ap.parse_args()
+    pick = args.suite or args.only
     for name, fn in SECTIONS.items():
-        if args.only and name != args.only:
+        if pick and name != pick:
             continue
-        fn()
+        if name == "feature_plane":
+            if not pick:  # full-size suite is minutes of loop-reference
+                continue  # work — run it explicitly via --suite
+            fn(smoke=args.smoke, out_path=args.out)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

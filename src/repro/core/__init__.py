@@ -1,5 +1,6 @@
 """The paper's contribution: inference-time feature injection (ITFI).
 
+  event_log      — columnar append-only event log (the feature-plane SoA)
   feature_store  — batch "daily job" feature snapshots (§III-A)
   realtime       — streaming real-time feature service (§III-B, Fig. 2)
   injection      — the merge + inject-as-if-batch operator (§III-B)
@@ -7,6 +8,7 @@
   metrics        — engagement metrics + paired significance tests (§IV)
   ab             — the A/B experiment harness reproducing §IV
 """
+from repro.core.event_log import EventLog  # noqa: F401
 from repro.core.feature_store import (  # noqa: F401
     BatchFeatureStore, FeatureStoreConfig)
 from repro.core.injection import FeatureInjector, InjectionConfig  # noqa: F401

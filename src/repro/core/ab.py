@@ -133,14 +133,14 @@ def make_platform(ab: ABConfig, model_cfg: ModelConfig, params, world: World,
     w = ab.world
     store = BatchFeatureStore(FeatureStoreConfig(
         n_users=w.n_users, feature_len=ab.feature_len))
-    store.append_events(history_events)
+    cols = events_to_arrays(history_events)
+    store.extend(cols["user"], cols["item"], cols["ts"])
     rts = RealtimeFeatureService(RealtimeConfig(
         n_users=w.n_users, buffer_len=ab.rt_buffer_len,
         ingest_latency=ab.rt_ingest_latency))
     # warm the realtime buffers with the trailing history (bounded retention
     # makes anything older invisible anyway)
-    for ev in history_events:
-        rts.ingest(ev.user, ev.item, ev.ts)
+    rts.extend(cols["user"], cols["item"], cols["ts"])
     inj = FeatureInjector(
         InjectionConfig(policy=policy, feature_len=ab.feature_len,
                         merge_impl=merge_impl, staleness=staleness),

@@ -1,0 +1,269 @@
+"""Columnar append-only event log — the shared feature-plane backbone.
+
+The per-user Python lists the seed used for both the batch store and the
+realtime service cap simulations at toy user counts: every snapshot was a
+Python loop over users, every lookup a list comprehension per row. This
+module replaces them with a struct-of-arrays design:
+
+* three flat columns (``user``, ``item``, ``ts``) with amortized-doubling
+  growth — O(1) append, O(m) columnar extend;
+* a per-user CSR-style index over a sorted **base** prefix (one
+  ``np.lexsort`` by ``(user, ts, item)`` plus ``searchsorted`` row
+  offsets), rebuilt lazily and only when the unsorted **pending** suffix
+  outgrows a fraction of the base. Reads that race interleaved writes —
+  the serving loop's ``observe``/``lookup`` pattern — sort just the small
+  pending suffix and merge per queried row, so a lookup never pays a
+  full-log re-sort.
+
+The read primitive is ``materialize(users, lo, hi, k)``: per-user events
+with ``lo <= ts < hi``, sorted by ``(ts, item)``, truncated to the
+freshest ``k``, right-aligned into ``(m, k)`` padded arrays — the batch
+store's snapshot/cutoff read. The realtime service keeps its own bounded
+``(n_users, buffer_len)`` ring arrays (core/realtime.py) and shares
+``sort_window_right_align`` below.
+
+Both stores match the retired loop implementations
+(``core/_reference.py``) bit-for-bit; see tests/test_feature_plane_diff.py.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+Features = Tuple[np.ndarray, np.ndarray, np.ndarray]  # items, ts, valid
+
+
+def sort_window_right_align(items: np.ndarray, ts: np.ndarray,
+                            vis: np.ndarray, k: int, ts_dtype=np.int32,
+                            ) -> Features:
+    """Row-wise: sort the visible ``(ts, item)`` pairs ascending, keep the
+    freshest ``k`` per row, right-align into (m, k) padded arrays.
+
+    items/ts (m, w) int64 scratch panes, vis (m, w) bool. The composite
+    int64 sort key pushes invisible slots to the left; stable argsort
+    preserves arrival order among exact duplicates.
+    """
+    m = items.shape[0]
+    out_i = np.zeros((m, k), np.int32)
+    out_t = np.zeros((m, k), ts_dtype)
+    out_v = np.zeros((m, k), np.int32)
+    if m == 0 or not vis.any():
+        return out_i, out_t, out_v
+    t0 = ts[vis].min()
+    i0 = items[vis].min()
+    iscale = int(items[vis].max()) - int(i0) + 1
+    key = np.where(vis, (ts - t0) * iscale + (items - i0), -1)
+    order = np.argsort(key, axis=1, kind="stable")
+    ts = np.take_along_axis(ts, order, axis=1)
+    items = np.take_along_axis(items, order, axis=1)
+    w = items.shape[1]
+    if k <= w:
+        ts, items = ts[:, w - k:], items[:, w - k:]
+    else:
+        pad = ((0, 0), (k - w, 0))
+        ts, items = np.pad(ts, pad), np.pad(items, pad)
+    keep = np.minimum(vis.sum(axis=1), k)
+    mask = np.arange(k)[None, :] >= (k - keep)[:, None]
+    out_i[mask] = items[mask]
+    out_t[mask] = ts[mask].astype(ts_dtype)
+    out_v[mask] = 1
+    return out_i, out_t, out_v
+
+
+def _scatter_right_aligned(order, item_col, ts_col, a, counts, k,
+                           items, ts_out, valid):
+    """Scatter CSR ranges [a, a+counts) (already (ts, item)-sorted) into
+    right-aligned (m, k) outputs. Pure gathers — no per-row loop."""
+    total = int(counts.sum())
+    if total == 0:
+        return
+    rows = np.repeat(np.arange(len(counts)), counts)
+    offs = np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+    src = order[np.repeat(a, counts) + offs]
+    cols = k - np.repeat(counts, counts) + offs
+    items[rows, cols] = item_col[src]
+    ts_out[rows, cols] = ts_col[src].astype(ts_out.dtype)
+    valid[rows, cols] = 1
+
+
+class _SortedIndex:
+    """(user, ts, item)-sorted CSR over a column slice + composite key."""
+
+    def __init__(self, users, items, ts):
+        self.order = np.lexsort((items, ts, users))
+        us = users[self.order]
+        tss = ts[self.order]
+        self.ts_min = int(ts.min()) if len(ts) else 0
+        ts_max = int(ts.max()) if len(ts) else 0
+        self.scale = ts_max - self.ts_min + 2
+        self.key = us * self.scale + (tss - self.ts_min)
+
+    def window(self, users, lo, hi, k):
+        """Per queried user: CSR range of the freshest <=k events with
+        lo <= ts < hi. Returns (a, counts) into ``self.order``."""
+        qlo = users * self.scale + np.clip(lo - self.ts_min, 0,
+                                           self.scale - 1)
+        qhi = users * self.scale + np.clip(hi - self.ts_min, 0,
+                                           self.scale - 1)
+        a = np.searchsorted(self.key, qlo, side="left")
+        b = np.searchsorted(self.key, qhi, side="left")
+        a = np.maximum(a, b - k)
+        return a, b - a
+
+
+class EventLog:
+    """Append-only columnar (user, item, ts) log with a lazy base index
+    and a sort-free pending suffix merged at read time."""
+
+    # full rebuild when pending > max(MIN_REBUILD, base/8)
+    MIN_REBUILD = 4096
+
+    def __init__(self, n_users: int, capacity: int = 1024):
+        self.n_users = int(n_users)
+        cap = max(int(capacity), 16)
+        self._user = np.empty(cap, np.int64)
+        self._item = np.empty(cap, np.int32)
+        self._ts = np.empty(cap, np.int64)
+        self._n = 0
+        self._base_n = 0          # events covered by _base
+        self._base: _SortedIndex = None
+        self._tail: _SortedIndex = None
+        self._tail_span = (0, 0)  # (base_n, n) the cached tail covers
+
+    # ------------------------------------------------------------------
+    # writes
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def n_events(self) -> int:
+        return self._n
+
+    def _grow(self, need: int) -> None:
+        cap = len(self._user)
+        if self._n + need <= cap:
+            return
+        new = cap
+        while new < self._n + need:
+            new *= 2
+        for name in ("_user", "_item", "_ts"):
+            arr = getattr(self, name)
+            out = np.empty(new, arr.dtype)
+            out[:self._n] = arr[:self._n]
+            setattr(self, name, out)
+
+    def append(self, user: int, item: int, ts: int) -> None:
+        if not 0 <= user < self.n_users:
+            raise IndexError(f"user {user} out of range [0, {self.n_users})")
+        self._grow(1)
+        i = self._n
+        self._user[i] = user
+        self._item[i] = item
+        self._ts[i] = ts
+        self._n = i + 1
+
+    def extend(self, users, items, ts) -> None:
+        """Columnar bulk append (parallel arrays)."""
+        users = np.asarray(users)
+        m = len(users)
+        if m == 0:
+            return
+        if users.min() < 0 or users.max() >= self.n_users:
+            raise IndexError(
+                f"user ids out of range [0, {self.n_users}): "
+                f"[{users.min()}, {users.max()}]")
+        self._grow(m)
+        s = self._n
+        self._user[s:s + m] = users
+        self._item[s:s + m] = np.asarray(items)
+        self._ts[s:s + m] = np.asarray(ts)
+        self._n = s + m
+
+    # ------------------------------------------------------------------
+    # index maintenance
+    # ------------------------------------------------------------------
+    def _rebuild(self) -> None:
+        n = self._n
+        self._base = _SortedIndex(self._user[:n], self._item[:n],
+                                  self._ts[:n])
+        self._base_n = n
+
+    def _ensure_base(self, n_queried: int) -> None:
+        pending = self._n - self._base_n
+        if self._base is None or pending > max(self.MIN_REBUILD,
+                                               self._base_n // 8):
+            self._rebuild()
+        elif pending and n_queried >= max(1024, pending):
+            # population-scale read racing a small pending suffix (e.g.
+            # run_snapshot right after a serve wave): the merge path's
+            # query-sized scratch panes would dwarf one amortized rebuild
+            self._rebuild()
+
+    def _tail_index(self) -> _SortedIndex:
+        """Sorted index over the pending suffix, cached between writes."""
+        span = (self._base_n, self._n)
+        if self._tail_span != span:
+            p0, n = span
+            self._tail = _SortedIndex(self._user[p0:n], self._item[p0:n],
+                                      self._ts[p0:n])
+            self._tail_span = span
+        return self._tail
+
+    def min_ts(self) -> int:
+        if self._n == 0:
+            raise ValueError("empty log has no min ts")
+        return int(self._ts[:self._n].min())
+
+    def user_events(self, user: int) -> List[Tuple[int, int]]:
+        """(ts, item) pairs for one user, sorted — debug/compat helper."""
+        if self._base is None or self._base_n != self._n:
+            self._rebuild()
+        base = self._base
+        a = np.searchsorted(base.key, np.int64(user) * base.scale)
+        b = np.searchsorted(base.key, np.int64(user + 1) * base.scale)
+        idx = base.order[a:b]
+        return [(int(t), int(i)) for t, i in zip(self._ts[idx],
+                                                 self._item[idx])]
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+    def materialize(self, users, lo: int, hi: int, k: int,
+                    ts_dtype=np.int32) -> Features:
+        """Freshest ``k`` events with ``lo <= ts < hi`` per requested user,
+        right-aligned ascending ``(ts, item)`` into (len(users), k) arrays.
+        """
+        users = np.asarray(users, np.int64).ravel()
+        m = len(users)
+        items = np.zeros((m, k), np.int32)
+        ts_out = np.zeros((m, k), ts_dtype)
+        valid = np.zeros((m, k), np.int32)
+        if m == 0 or self._n == 0 or hi <= lo:
+            return items, ts_out, valid
+        self._ensure_base(m)
+        a, counts = self._base.window(users, lo, hi, k)
+        if self._n == self._base_n:
+            # fast path: everything indexed, one scatter
+            _scatter_right_aligned(self._base.order, self._item, self._ts,
+                                   a, counts, k, items, ts_out, valid)
+            return items, ts_out, valid
+        # merge path: sort only the small pending suffix (cached between
+        # writes), combine per row
+        p0 = self._base_n
+        tail = self._tail_index()
+        ta, tcounts = tail.window(users, lo, hi, k)
+        # scratch pane: base block (<=k) | tail block (<=k), both already
+        # (ts, item)-sorted; a row-wise merge-sort keeps exact semantics
+        # (only the freshest k of each block can survive the union's cut)
+        pane_i = np.zeros((m, 2 * k), np.int64)
+        pane_t = np.zeros((m, 2 * k), np.int64)
+        pane_v = np.zeros((m, 2 * k), bool)
+        _scatter_right_aligned(self._base.order, self._item, self._ts,
+                               a, counts, k, pane_i[:, :k], pane_t[:, :k],
+                               pane_v[:, :k])
+        _scatter_right_aligned(tail.order, self._item[p0:self._n],
+                               self._ts[p0:self._n], ta, tcounts, k,
+                               pane_i[:, k:], pane_t[:, k:], pane_v[:, k:])
+        return sort_window_right_align(pane_i, pane_t, pane_v, k, ts_dtype)

@@ -1,8 +1,9 @@
 """Batch feature store — the paper's "daily job" (§III-A).
 
-Materializes per-user fixed-length watch-history features from the event log
-on a fixed cadence (default: midnight). Between snapshots the features are
-served *statically* — exactly the staleness the paper's injection closes.
+Materializes per-user fixed-length watch-history features from the event
+log on a fixed cadence (default: midnight). Between snapshots the features
+are served *statically* — exactly the staleness the paper's injection
+closes.
 
 Features are model-ready padded arrays:
 
@@ -10,9 +11,17 @@ Features are model-ready padded arrays:
     ts    (U, K) int32   — event timestamps (same layout)
     valid (U, K) int32   — 1 where a real event occupies the slot
 
-``K = feature_len``. The store keeps every snapshot it has produced
-(versioned by snapshot timestamp) so the latency ablation can serve
-arbitrarily stale feature generations.
+``K = feature_len``. Snapshots are versioned by timestamp; the store
+materializes the newest ``snapshot_retention`` generations (default 8 —
+``None`` keeps all, the seed behavior) and recomputes older registered
+generations from the log on demand, so time-travel reads keep working
+without production-scale memory growth.
+
+The event log is the columnar ``EventLog`` (core/event_log.py):
+``run_snapshot`` and ``lookup_at_cutoff`` are single vectorized windowed
+gathers — no Python-level per-user loop anywhere on the hot path. The
+retired loop implementation lives in ``core/_reference.py`` and the two
+are differentially tested to be bit-for-bit identical.
 """
 from __future__ import annotations
 
@@ -21,6 +30,8 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.core.event_log import EventLog
 
 DAY = 86400
 
@@ -32,6 +43,16 @@ class FeatureStoreConfig:
     snapshot_period: int = DAY      # "daily" job cadence
     snapshot_offset: int = 0        # job runs at midnight by default
     window: int = 30 * DAY          # history lookback of the daily job
+    # keep at most this many materialized generations (None = keep all).
+    # Each generation is (n_users, K)x3 int32, so unbounded retention is
+    # a memory leak at production scale and a cold store's catch-up would
+    # burst-materialize every boundary since the first event; evicted or
+    # skipped generations stay registered and are recomputed from the log
+    # on the (rare) time-travel read that still wants them. Caveat: a
+    # recompute reads the log as of NOW, so events that arrived late (old
+    # ts, appended after the generation ran) are included where the frozen
+    # arrays would not have had them.
+    snapshot_retention: Optional[int] = 8
 
 
 class BatchFeatureStore:
@@ -39,8 +60,7 @@ class BatchFeatureStore:
 
     def __init__(self, cfg: FeatureStoreConfig):
         self.cfg = cfg
-        # per-user chronological event log: lists of (ts, item)
-        self._log: List[List[Tuple[int, int]]] = [[] for _ in range(cfg.n_users)]
+        self._log = EventLog(cfg.n_users)
         # snapshot_ts -> (items, ts, valid) arrays
         self._snapshots: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         self._snapshot_times: List[int] = []
@@ -49,11 +69,15 @@ class BatchFeatureStore:
     # Ingest (the offline log collector — sees everything, eventually)
     # ------------------------------------------------------------------
     def append(self, user: int, item: int, ts: int) -> None:
-        self._log[user].append((ts, item))
+        self._log.append(user, item, ts)
+
+    def extend(self, users, items, ts) -> None:
+        """Columnar bulk ingest (parallel arrays)."""
+        self._log.extend(users, items, ts)
 
     def append_events(self, events) -> None:
         for ev in events:
-            self.append(ev.user, ev.item, ev.ts)
+            self._log.append(ev.user, ev.item, ev.ts)
 
     # ------------------------------------------------------------------
     # The daily job
@@ -61,34 +85,48 @@ class BatchFeatureStore:
     def run_snapshot(self, snapshot_ts: int) -> None:
         """Materialize features from all events with ts < snapshot_ts."""
         c = self.cfg
-        k = c.feature_len
-        items = np.zeros((c.n_users, k), np.int32)
-        ts_arr = np.zeros((c.n_users, k), np.int32)
-        valid = np.zeros((c.n_users, k), np.int32)
-        lo = snapshot_ts - c.window
-        for u in range(c.n_users):
-            evs = [e for e in self._log[u] if lo <= e[0] < snapshot_ts]
-            evs.sort()
-            evs = evs[-k:]
-            n = len(evs)
-            if n:
-                items[u, k - n:] = [e[1] for e in evs]
-                ts_arr[u, k - n:] = [e[0] for e in evs]
-                valid[u, k - n:] = 1
-        self._snapshots[snapshot_ts] = (items, ts_arr, valid)
+        users = np.arange(c.n_users, dtype=np.int64)
+        feats = self._log.materialize(
+            users, snapshot_ts - c.window, snapshot_ts, c.feature_len)
+        self._snapshots[snapshot_ts] = feats
+        self._register_time(snapshot_ts)
+        if c.snapshot_retention is not None:
+            while len(self._snapshots) > c.snapshot_retention:
+                self._snapshots.pop(min(self._snapshots))
+
+    def _register_time(self, snapshot_ts: int) -> None:
         bisect.insort(self._snapshot_times, snapshot_ts)
 
     def maybe_run_due_snapshots(self, now: int) -> None:
-        """Run any snapshot whose scheduled time has passed (idempotent)."""
+        """Run every snapshot whose scheduled time has passed (idempotent).
+
+        Catch-up is complete: after a gap of several periods, each missed
+        boundary is materialized in order. With no prior snapshot, catch-up
+        starts at the first period boundary after the earliest logged event
+        (earlier snapshots would be all-zero; if the log is empty only the
+        most recent boundary runs, registering an empty generation).
+        With ``snapshot_retention`` set, boundaries that would be evicted
+        immediately are registered without building their arrays.
+        """
         c = self.cfg
-        t = ((now - c.snapshot_offset) // c.snapshot_period) * c.snapshot_period \
-            + c.snapshot_offset
-        while t > (self._snapshot_times[-1] if self._snapshot_times else -1):
-            due = (self._snapshot_times[-1] + c.snapshot_period
-                   if self._snapshot_times else t)
-            if due > now:
-                break
-            self.run_snapshot(due)
+        latest_due = ((now - c.snapshot_offset) // c.snapshot_period) \
+            * c.snapshot_period + c.snapshot_offset
+        if self._snapshot_times:
+            start = self._snapshot_times[-1] + c.snapshot_period
+        elif len(self._log):
+            first = self._log.min_ts()
+            start = ((first - c.snapshot_offset) // c.snapshot_period + 1) \
+                * c.snapshot_period + c.snapshot_offset
+        else:
+            start = latest_due
+        while start < 0:  # stay on the offset grid (defensive: ts >= 0)
+            start += c.snapshot_period
+        for due in range(start, latest_due + 1, c.snapshot_period):
+            if c.snapshot_retention is not None and due <= latest_due \
+                    - c.snapshot_retention * c.snapshot_period:
+                self._register_time(due)
+            else:
+                self.run_snapshot(due)
 
     # ------------------------------------------------------------------
     # Serving reads
@@ -106,6 +144,8 @@ class BatchFeatureStore:
         if snap is None:
             z = np.zeros((len(users), k), np.int32)
             return z, z.copy(), z.copy()
+        if snap not in self._snapshots:  # evicted generation: recompute
+            return self.lookup_at_cutoff(users, snap)
         items, ts_arr, valid = self._snapshots[snap]
         return items[users], ts_arr[users], valid[users]
 
@@ -116,22 +156,9 @@ class BatchFeatureStore:
         feature pipeline whose refresh latency places the cutoff at
         ``cutoff`` rather than last midnight)."""
         c = self.cfg
-        k = c.feature_len
-        items = np.zeros((len(users), k), np.int32)
-        ts_arr = np.zeros((len(users), k), np.int32)
-        valid = np.zeros((len(users), k), np.int32)
-        lo = cutoff - c.window
-        for j, u in enumerate(users):
-            evs = [e for e in self._log[u] if lo <= e[0] < cutoff]
-            evs.sort()
-            evs = evs[-k:]
-            n = len(evs)
-            if n:
-                items[j, k - n:] = [e[1] for e in evs]
-                ts_arr[j, k - n:] = [e[0] for e in evs]
-                valid[j, k - n:] = 1
-        return items, ts_arr, valid
+        return self._log.materialize(
+            np.asarray(users), cutoff - c.window, cutoff, c.feature_len)
 
     # ------------------------------------------------------------------
     def user_events(self, user: int) -> List[Tuple[int, int]]:
-        return sorted(self._log[user])
+        return self._log.user_events(user)

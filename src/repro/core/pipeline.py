@@ -24,8 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np

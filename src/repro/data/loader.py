@@ -22,7 +22,7 @@ Loss is applied on the LAST position only (sequence → next item).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 
@@ -51,13 +51,19 @@ def build_examples(events: Dict[str, np.ndarray], lcfg: LoaderConfig,
     """
     k, rl = lcfg.feature_len, lcfg.recent_len
     sep = sep_token(lcfg.n_items)
-    by_user: Dict[int, List[Tuple[int, int]]] = {}
-    for u, it, ts in zip(events["user"], events["item"], events["ts"]):
-        by_user.setdefault(int(u), []).append((int(ts), int(it)))
+    # columnar grouping: one lexsort by (user, ts, item) replaces the
+    # per-event dict build; each user's slice arrives already sorted.
+    u_col = np.asarray(events["user"], np.int64)
+    it_col = np.asarray(events["item"], np.int64)
+    ts_col = np.asarray(events["ts"], np.int64)
+    order = np.lexsort((it_col, ts_col, u_col))
+    uniq, starts = np.unique(u_col[order], return_index=True)
+    bounds = np.append(starts, len(order))
 
     toks_out, labels_out = [], []
-    for u, evs in by_user.items():
-        evs.sort()
+    for g in range(len(uniq)):
+        idx = order[bounds[g]:bounds[g + 1]]
+        evs = list(zip(ts_col[idx].tolist(), it_col[idx].tolist()))
         for j in range(len(evs)):
             ts_label, item_label = evs[j]
             midnight = (ts_label // DAY) * DAY

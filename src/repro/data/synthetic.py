@@ -249,16 +249,19 @@ class World:
 
 def session_schedule(cfg: WorldConfig, day: int, rng: np.random.RandomState,
                      ) -> List[Tuple[int, int]]:
-    """[(ts, user), ...] sorted by ts, for one day. Daytime-weighted."""
-    out = []
+    """[(ts, user), ...] sorted by ts, for one day. Daytime-weighted.
+
+    Columnar: one poisson draw for all users, one normal/randint draw for
+    all sessions, one lexsort — no per-user Python loop.
+    """
     base = day * DAY
-    for u in range(cfg.n_users):
-        n = rng.poisson(cfg.sessions_per_day)
-        for _ in range(n):
-            hour = np.clip(rng.normal(15, 5), 0.0, 23.9)  # afternoon peak
-            out.append((base + int(hour * 3600) + rng.randint(0, 3600), u))
-    out.sort()
-    return out
+    counts = rng.poisson(cfg.sessions_per_day, cfg.n_users)
+    users = np.repeat(np.arange(cfg.n_users), counts)
+    n = len(users)
+    hours = np.clip(rng.normal(15, 5, n), 0.0, 23.9)  # afternoon peak
+    tss = base + (hours * 3600).astype(np.int64) + rng.randint(0, 3600, n)
+    order = np.lexsort((users, tss))
+    return list(zip(tss[order].tolist(), users[order].tolist()))
 
 
 def simulate_day(world: World, day: int, serve_fn: Callable,
@@ -366,9 +369,12 @@ def bootstrap_serve_fn(world: World, seed: int) -> Callable:
 
 
 def events_to_arrays(events: List[Event]) -> Dict[str, np.ndarray]:
+    """Event list -> columnar arrays, the feature plane's native format
+    (directly consumable by ``EventLog.extend`` / the store ``extend``s)."""
+    n = len(events)
     return {
-        "user": np.array([e.user for e in events], np.int32),
-        "item": np.array([e.item for e in events], np.int32),
-        "ts": np.array([e.ts for e in events], np.int64),
-        "attributed": np.array([e.attributed for e in events], bool),
+        "user": np.fromiter((e.user for e in events), np.int32, n),
+        "item": np.fromiter((e.item for e in events), np.int32, n),
+        "ts": np.fromiter((e.ts for e in events), np.int64, n),
+        "attributed": np.fromiter((e.attributed for e in events), bool, n),
     }

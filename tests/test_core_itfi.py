@@ -1,7 +1,6 @@
 """Core ITFI behaviour: batch staleness, realtime visibility, injection
 semantics (paper §III)."""
 import numpy as np
-import pytest
 
 from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
 from repro.core.injection import FeatureInjector, InjectionConfig
@@ -37,6 +36,52 @@ def test_snapshot_scheduler_idempotent():
     assert len(st._snapshot_times) == 1
     st.maybe_run_due_snapshots(3 * DAY + 1)  # catches up day 2 and 3
     assert st._snapshot_times == [DAY, 2 * DAY, 3 * DAY]
+
+
+def test_scheduler_catchup_no_prior_snapshot():
+    """With no snapshot yet, catch-up starts at the first period boundary
+    after the earliest event — not just the single most recent due one."""
+    st = _store()
+    st.append(0, 5, ts=10)
+    st.maybe_run_due_snapshots(3 * DAY + 1)
+    assert st._snapshot_times == [DAY, 2 * DAY, 3 * DAY]
+
+
+def test_scheduler_catchup_multiple_missed_periods():
+    st = _store()
+    st.append(0, 5, ts=10)
+    st.maybe_run_due_snapshots(DAY + 5)
+    assert st._snapshot_times == [DAY]
+    st.append(0, 7, ts=DAY + 50)
+    st.maybe_run_due_snapshots(4 * DAY + 5)  # three missed periods
+    assert st._snapshot_times == [DAY, 2 * DAY, 3 * DAY, 4 * DAY]
+    # every intermediate generation is materialized, not just the last:
+    # the 2*DAY generation must already contain the DAY+50 event
+    items, _, valid = st.lookup(np.array([0]), now=2 * DAY + 1)
+    assert [int(i) for i, v in zip(items[0], valid[0]) if v] == [5, 7]
+
+
+def test_scheduler_nonzero_offset():
+    st = BatchFeatureStore(FeatureStoreConfig(
+        n_users=2, feature_len=8, snapshot_offset=3600))
+    st.append(0, 1, ts=100)
+    st.maybe_run_due_snapshots(2 * DAY + 4000)
+    assert st._snapshot_times == [3600, DAY + 3600, 2 * DAY + 3600]
+
+
+def test_scheduler_empty_log_registers_latest_boundary():
+    st = _store()
+    st.maybe_run_due_snapshots(2 * DAY + 7)
+    assert st._snapshot_times == [2 * DAY]
+    _, _, valid = st.lookup(np.array([0]), now=2 * DAY + 8)
+    assert valid.sum() == 0
+
+
+def test_scheduler_not_due_yet_runs_nothing():
+    st = _store()
+    st.append(0, 1, ts=10)
+    st.maybe_run_due_snapshots(DAY - 1)  # first boundary not reached
+    assert st._snapshot_times == []
 
 
 def test_lookup_at_cutoff_matches_snapshot():

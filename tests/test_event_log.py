@@ -1,0 +1,146 @@
+"""EventLog: columnar growth, CSR index + pending-merge reads, bounds."""
+import numpy as np
+import pytest
+
+from repro.core.event_log import EventLog
+
+
+def test_append_and_growth():
+    log = EventLog(n_users=3, capacity=16)
+    for i in range(100):  # force several doublings
+        log.append(i % 3, i, i * 10)
+    assert len(log) == 100
+    assert log.min_ts() == 0
+    assert log.user_events(0)[:2] == [(0, 0), (30, 3)]
+
+
+def test_extend_columnar_matches_append():
+    a, b = EventLog(5), EventLog(5)
+    rng = np.random.RandomState(0)
+    u = rng.randint(0, 5, 200)
+    it = rng.randint(0, 50, 200)
+    ts = rng.randint(0, 1000, 200)
+    a.extend(u, it, ts)
+    for x, y, z in zip(u, it, ts):
+        b.append(x, y, z)
+    for user in range(5):
+        assert a.user_events(user) == b.user_events(user)
+    for feats_a, feats_b in zip(a.materialize(np.arange(5), 0, 500, 8),
+                                b.materialize(np.arange(5), 0, 500, 8)):
+        np.testing.assert_array_equal(feats_a, feats_b)
+
+
+def test_user_bounds_rejected():
+    log = EventLog(4)
+    with pytest.raises(IndexError):
+        log.append(4, 1, 10)
+    with pytest.raises(IndexError):
+        log.append(-1, 1, 10)
+    with pytest.raises(IndexError):
+        log.extend([0, 4], [1, 2], [10, 20])
+    assert len(log) == 0  # extend validates before writing
+
+
+def test_materialize_empty_cases():
+    log = EventLog(4)
+    # empty log
+    items, ts, valid = log.materialize(np.array([0, 1]), 0, 100, 4)
+    assert items.shape == (2, 4) and valid.sum() == 0
+    # empty user list
+    items, ts, valid = log.materialize(np.array([], np.int64), 0, 100, 4)
+    assert items.shape == (0, 4)
+    log.append(2, 7, 50)
+    # empty window (hi <= lo) and out-of-range windows
+    for lo, hi in [(100, 100), (100, 50), (60, 100), (0, 50)]:
+        assert log.materialize(np.array([2]), lo, hi, 4)[2].sum() == 0
+    # hi is exclusive, lo inclusive
+    assert log.materialize(np.array([2]), 50, 51, 4)[2].sum() == 1
+
+
+def test_materialize_right_aligned_truncation():
+    log = EventLog(1)
+    for t in range(10):
+        log.append(0, t, t)
+    items, ts, valid = log.materialize(np.array([0]), 0, 100, 4)
+    np.testing.assert_array_equal(items[0], [6, 7, 8, 9])  # freshest k
+    np.testing.assert_array_equal(valid[0], [1, 1, 1, 1])
+    items, ts, valid = log.materialize(np.array([0]), 0, 3, 4)
+    np.testing.assert_array_equal(items[0], [0, 0, 1, 2])  # right-aligned
+    np.testing.assert_array_equal(valid[0], [0, 1, 1, 1])
+
+
+def test_materialize_tie_order_is_ts_then_item():
+    log = EventLog(1)
+    for it in (5, 3, 9):
+        log.append(0, it, 100)  # identical timestamps
+    items, _, _ = log.materialize(np.array([0]), 0, 200, 3)
+    np.testing.assert_array_equal(items[0], [3, 5, 9])
+
+
+def test_pending_merge_path_matches_rebuilt():
+    """Reads with an unsorted pending suffix (the interleaved serve
+    pattern) must equal reads after a full index rebuild."""
+    rng = np.random.RandomState(3)
+    log = EventLog(6)
+    log.extend(rng.randint(0, 6, 300), rng.randint(0, 40, 300),
+               rng.randint(0, 2000, 300))
+    q = np.arange(6)
+    log.materialize(q, 0, 2000, 8)  # builds the base index
+    # now interleave appends (pending suffix) with reads
+    for step in range(40):
+        log.append(rng.randint(6), rng.randint(40), rng.randint(0, 2000))
+        got = log.materialize(q, 200, 1800, 8)
+        assert log._base_n < len(log)  # still on the merge path
+        fresh = EventLog(6)
+        fresh.extend(log._user[:len(log)], log._item[:len(log)],
+                     log._ts[:len(log)])
+        want = fresh.materialize(q, 200, 1800, 8)
+        for x, y in zip(got, want):
+            np.testing.assert_array_equal(x, y)
+
+
+def test_rebuild_threshold_amortizes():
+    """The base index only rebuilds when pending outgrows it."""
+    log = EventLog(2)
+    log.extend(np.zeros(10, int), np.arange(10), np.arange(10))
+    log.materialize(np.array([0]), 0, 100, 4)
+    base_after_first = log._base_n
+    log.append(1, 5, 50)
+    log.materialize(np.array([0, 1]), 0, 100, 4)
+    assert log._base_n == base_after_first  # pending merged, not re-sorted
+
+
+def test_population_read_forces_rebuild_over_merge():
+    """A full-population query racing a tiny pending suffix rebuilds the
+    base (amortized) instead of allocating query-sized merge panes."""
+    u = 2000
+    log = EventLog(u)
+    rng = np.random.RandomState(0)
+    log.extend(rng.randint(0, u, 5000), rng.randint(0, 9, 5000),
+               rng.randint(0, 1000, 5000))
+    log.materialize(np.arange(u), 0, 1000, 4)   # builds base
+    log.append(0, 1, 500)                       # tiny pending suffix
+    log.materialize(np.arange(u), 0, 1000, 4)   # population-scale read
+    assert log._base_n == len(log)
+
+
+def test_tail_index_cached_between_writes():
+    log = EventLog(4)
+    log.extend(np.zeros(20, int), np.arange(20), np.arange(20))
+    log.materialize(np.array([0]), 0, 100, 4)
+    log.append(1, 7, 5)
+    log.materialize(np.array([0, 1]), 0, 100, 4)
+    tail_first = log._tail
+    got = log.materialize(np.array([1]), 0, 100, 4)
+    assert log._tail is tail_first              # no re-sort between writes
+    assert [int(i) for i, v in zip(got[0][0], got[2][0]) if v] == [7]
+    log.append(1, 8, 6)                         # write invalidates
+    log.materialize(np.array([1]), 0, 100, 4)
+    assert log._tail is not tail_first
+
+
+def test_ts_dtype_is_int32_by_default():
+    log = EventLog(1)
+    log.append(0, 1, 5 * 86400)
+    _, ts, _ = log.materialize(np.array([0]), 0, 10 * 86400, 2)
+    assert ts.dtype == np.int32

@@ -1,8 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skips cleanly when hypothesis is absent (CI installs it via the ``test``
+extra; a bare runtime environment still collects the suite).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="install via pip install -e .[test]")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.metrics import two_proportion_z
 from repro.kernels.history_merge.ops import history_merge

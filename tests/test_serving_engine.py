@@ -88,6 +88,49 @@ def test_injection_changes_prediction():
     assert float(jnp.max(jnp.abs(l_stale - l_fresh))) > 1e-3
 
 
+def test_pad_tokens_empty_rows():
+    """Empty sequences produce all-pad rows (and so do absent rows)."""
+    _, _, eng = _engine("llama3.2-1b")
+    toks, valid = eng.pad_tokens([[], [1, 2]], 8)
+    assert toks.shape == (2, 8) and valid.shape == (2, 8)
+    assert valid[0].sum() == 0 and toks[0].sum() == 0
+    np.testing.assert_array_equal(toks[1, -2:], [1, 2])
+    # batch with fewer rows than max_batch: trailing rows are pad-only
+    toks, valid = eng.pad_tokens([[3]], 8)
+    assert valid[1].sum() == 0
+
+
+def test_pad_tokens_truncation_keeps_tail():
+    """Sequences longer than ``length`` keep the most recent tokens, for
+    both alignments."""
+    _, _, eng = _engine("llama3.2-1b")
+    seq = list(range(1, 13))  # longer than length=8
+    toks, valid = eng.pad_tokens([seq], 8)
+    np.testing.assert_array_equal(toks[0], seq[-8:])
+    assert valid[0].all()
+    toks, valid = eng.pad_tokens([seq], 8, align="left")
+    np.testing.assert_array_equal(toks[0], seq[-8:])
+    assert valid[0].all()
+
+
+def test_pad_tokens_drops_rows_beyond_max_batch():
+    """Inputs past max_batch are silently dropped (shape stays fixed)."""
+    _, _, eng = _engine("llama3.2-1b")  # max_batch=2
+    toks, valid = eng.pad_tokens([[1], [2], [3], [4]], 8)
+    assert toks.shape == (2, 8)
+    np.testing.assert_array_equal(toks[0, -1:], [1])
+    np.testing.assert_array_equal(toks[1, -1:], [2])
+    assert 3 not in toks and 4 not in toks
+
+
+def test_pad_tokens_left_alignment():
+    _, _, eng = _engine("llama3.2-1b")
+    toks, valid = eng.pad_tokens([[5, 6], []], 8, align="left")
+    np.testing.assert_array_equal(toks[0, :2], [5, 6])
+    assert valid[0, :2].all() and not valid[0, 2:].any()
+    assert valid[1].sum() == 0
+
+
 def test_greedy_sample():
     cfg, params, eng = _engine("llama3.2-1b")
     logits = jnp.zeros((2, cfg.vocab_padded)).at[0, 5].set(9.).at[1, 7].set(9.)
