@@ -14,6 +14,9 @@ Sections
   feature_plane      vectorized EventLog stores vs the loop reference
                      (snapshot materialization + batched lookups at
                      1k/100k/1M users; writes BENCH_feature_plane.json)
+  serving            end-to-end InjectionServer: cached-inject vs
+                     full-prefill-per-request under interleaved ingest at
+                     1k/10k users (writes BENCH_serving.json)
 """
 from __future__ import annotations
 
@@ -301,6 +304,169 @@ def bench_feature_plane(smoke: bool = False, out_path: str = None):
 
 
 # ----------------------------------------------------------------------
+def bench_serving(smoke: bool = False, out_path: str = None):
+    """End-to-end InjectionServer: cached-inject vs full-prefill-per-request.
+
+    Interleaved workload at each population size: every round ingests a
+    wave of fresh events (offline log + realtime stream) then serves
+    request batches of random users; the cached server pays inject(suffix)
+    + decode per hit, the baseline re-prefills the full history on every
+    request. Reports requests/sec and p50/p99 per-step (one fixed-shape
+    pane) latency, then spot-checks the two paths produce the same logits.
+    """
+    print("\n== serving (cached-inject vs full-prefill, interleaved ingest) ==")
+    from repro.configs.base import ModelConfig
+    from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.models.model import init_params
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.loop import InjectionServer, ServerConfig
+
+    n_items = 4000
+    feature_len = 240   # long batch history — the cost re-prefill pays
+    cfg = ModelConfig(
+        name="itfi-ranker-bench", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=n_items + 256,
+        rope_theta=10000.0, tie_embeddings=True)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    eng = ServingEngine(cfg, params, ServingConfig(
+        max_batch=16, prefill_len=256, inject_len=16, cache_capacity=512))
+
+    sizes = [(1_000, 1)] if smoke else [(1_000, 3), (10_000, 3)]
+    ev_per_user = 64 if smoke else 256
+    results = []
+
+    def build(n_users, use_cache):
+        rng = np.random.RandomState(0)
+        n = n_users * ev_per_user
+        store = BatchFeatureStore(FeatureStoreConfig(
+            n_users=n_users, feature_len=feature_len))
+        rts = RealtimeFeatureService(RealtimeConfig(
+            n_users=n_users, buffer_len=8, ingest_latency=0))
+        us = rng.randint(0, n_users, n).astype(np.int64)
+        its = rng.randint(0, n_items, n).astype(np.int64)
+        tss = rng.randint(0, 5 * DAY, n).astype(np.int64)
+        store.extend(us, its, tss)
+        rts.extend(us, its, tss)
+        inj = FeatureInjector(InjectionConfig(
+            policy="inject", feature_len=feature_len), store, rts)
+        return InjectionServer(eng, inj, ServerConfig(
+            slate_len=4, cache_entries=4096, use_cache=use_cache))
+
+    def req_users(rng, n_users, size):
+        """Request traffic with hot-user locality (sessions): 80% of
+        requests come from the hottest 10% of users — uniform traffic
+        would make every serving cache useless by construction."""
+        hot = max(n_users // 10, 1)
+        pick_hot = rng.rand(size) < 0.8
+        return np.where(pick_hot, rng.randint(0, hot, size),
+                        rng.randint(0, n_users, size))
+
+    wave = 64  # requests per serve() call (4 panes — lets the server's
+    #            cache-aware batching group hit rows into pure-hit panes)
+
+    def workload(srv, n_users, rounds, waves_per_round, seed=1):
+        """Interleaved ingest/serve; returns per-wave serve latencies.
+
+        Before timing, the cache is warmed over (up to budget) users — the
+        daily job's post-snapshot precompute pass. The baseline server
+        ignores warm(); its every request re-prefills by construction.
+        """
+        rng = np.random.RandomState(seed)
+        now = 5 * DAY + 100
+
+        def ingest_wave():
+            u = req_users(rng, n_users, 64)
+            it = rng.randint(0, n_items, 64)
+            t = np.full(64, now - 30)
+            srv.injector.batch.extend(u, it, t)
+            srv.injector.realtime.extend(u, it, t)
+
+        # untimed: roll the snapshot, warm the cache (daily-job precompute),
+        # and compile every jit on the request path (incl. inject — needs a
+        # fresh wave to exist)
+        srv.warm(np.arange(n_users), now)  # clamps itself to the budget
+        ingest_wave()
+        srv.serve(req_users(rng, n_users, wave), now)
+        h0, m0 = srv.cache.hits, srv.cache.misses
+
+        lat = []
+        for r in range(rounds):
+            ingest_wave()
+            for _ in range(waves_per_round):
+                q = req_users(rng, n_users, wave)
+                t0 = time.perf_counter()
+                srv.serve(q, now)
+                lat.append(time.perf_counter() - t0)
+            now += 60
+        return np.asarray(lat), srv.cache.hits - h0, srv.cache.misses - m0
+
+    rounds = 4 if smoke else 12
+    print(f"  {'users':>7s} {'path':>12s} {'req/s':>8s} {'p50':>8s} "
+          f"{'p99':>9s} {'hit%':>6s} {'prefills':>9s}   (p50/p99 per "
+          f"{wave}-request wave)")
+    for n_users, waves in sizes:
+        row = {"n_users": n_users}
+        for tag, use_cache in (("cached", True), ("full", False)):
+            srv = build(n_users, use_cache)
+            lat, hits, misses = workload(srv, n_users, rounds,
+                                         waves_per_round=waves)
+            n_req = len(lat) * wave
+            rps = n_req / lat.sum()
+            st = srv.stats()
+            hit = hits / max(hits + misses, 1)
+            row[tag] = {
+                "requests": int(n_req), "rps": float(rps),
+                "wave_requests": wave,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "hit_rate": float(hit), "stats": st,
+            }
+            print(f"  {n_users:7d} {tag:>12s} {rps:8.1f} "
+                  f"{row[tag]['p50_ms']:6.1f}ms {row[tag]['p99_ms']:7.1f}ms "
+                  f"{hit * 100:5.1f}% {st['prefill_calls']:9d}")
+        row["speedup"] = row["cached"]["rps"] / row["full"]["rps"]
+
+        # logits spot-check: identical stacks, same request -> same scores
+        sc = build(n_users, True)
+        sf = build(n_users, False)
+        rng = np.random.RandomState(2)
+        now = 5 * DAY + 100
+        wave_u = rng.randint(0, n_users, 64)
+        wave_i = rng.randint(0, n_items, 64)
+        for srv in (sc, sf):
+            srv.injector.batch.extend(wave_u, wave_i, np.full(64, now - 30))
+            srv.injector.realtime.extend(wave_u, wave_i, np.full(64, now - 30))
+        q = rng.randint(0, n_users, eng.scfg.max_batch)
+        sc.serve(q, now - 60)  # populate the cache, then hit it
+        a = sc.serve(q, now)
+        b_ = sf.serve(q, now)
+        diff = float(np.abs(a.scores - b_.scores).max())
+        row["logits_max_abs_diff"] = diff
+        row["logits_allclose"] = bool(diff < 2e-3)
+        row["slates_equal"] = bool((a.slate == b_.slate).all())
+        print(f"  {n_users:7d} speedup={row['speedup']:.2f}x "
+              f"logits max|Δ|={diff:.2e} "
+              f"slates_equal={row['slates_equal']}")
+        results.append(row)
+
+    default_name = ("BENCH_serving_smoke.json" if smoke
+                    else "BENCH_serving.json")
+    out_path = out_path or os.path.join(ROOT, default_name)
+    with open(out_path, "w") as f:
+        json.dump({"suite": "serving", "smoke": smoke,
+                   "config": {"arch": cfg.name, "max_batch": eng.scfg.max_batch,
+                              "prefill_len": eng.scfg.prefill_len,
+                              "inject_len": eng.scfg.inject_len,
+                              "feature_len": feature_len,
+                              "slate_len": 4},
+                   "results": results}, f, indent=2)
+    print(f"  wrote {os.path.abspath(out_path)}")
+    return results
+
+
+# ----------------------------------------------------------------------
 def bench_roofline():
     print("\n== roofline (dry-run artifacts; baseline -> optimized §Perf) ==")
     files = sorted(glob.glob(os.path.join(ROOT, "experiments", "dryrun",
@@ -343,6 +509,7 @@ SECTIONS = {
     "kernel_micro": bench_kernel_micro,
     "roofline": bench_roofline,
     "feature_plane": bench_feature_plane,
+    "serving": bench_serving,
 }
 
 
@@ -352,7 +519,7 @@ def main() -> None:
     ap.add_argument("--suite", default=None, choices=sorted(SECTIONS),
                     help="run a single suite (alias of --only)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small shapes for CI (feature_plane only)")
+                    help="small shapes for CI (feature_plane/serving only)")
     ap.add_argument("--out", default=None,
                     help="output path for suites that write a BENCH json")
     args = ap.parse_args()
@@ -360,9 +527,9 @@ def main() -> None:
     for name, fn in SECTIONS.items():
         if pick and name != pick:
             continue
-        if name == "feature_plane":
-            if not pick:  # full-size suite is minutes of loop-reference
-                continue  # work — run it explicitly via --suite
+        if name in ("feature_plane", "serving"):
+            if not pick:  # full-size suites take minutes — run them
+                continue  # explicitly via --suite
             fn(smoke=args.smoke, out_path=args.out)
         else:
             fn()

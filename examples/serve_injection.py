@@ -2,7 +2,10 @@
 
 Shows the TPU-native injection flow (prefill → inject → decode) on a
 reduced mamba2 — the cheapest-injection family: fresh events advance an
-O(1) recurrent state instead of growing a KV cache (DESIGN.md §4).
+O(1) recurrent state instead of growing a KV cache (DESIGN.md §4) —
+then the same flow as the *end-to-end serving loop*: feature stores ->
+FeatureInjector -> prefill-state cache -> engine, with cache hits after
+warming and invalidation when the daily snapshot rolls.
 
   PYTHONPATH=src python examples/serve_injection.py [--arch mamba2-780m]
 """
@@ -57,6 +60,46 @@ def main():
     for row, (h, f) in enumerate(zip(hists, fresh)):
         print(f"  user {row}: hist={len(h):2d} fresh={len(f)} -> "
               f"{[o[row] for o in outs]}")
+
+    # ------------------------------------------------------------------
+    # The same flow end to end: stores -> injector -> cached serving loop
+    # ------------------------------------------------------------------
+    from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.serving.loop import InjectionServer, ServerConfig
+
+    DAY = 86400
+    n_users, n_items, feature_len = 32, cfg.vocab_size - 2, 32
+    store = BatchFeatureStore(FeatureStoreConfig(
+        n_users=n_users, feature_len=feature_len))
+    rts = RealtimeFeatureService(RealtimeConfig(
+        n_users=n_users, buffer_len=8, ingest_latency=0))
+    n_ev = n_users * 12
+    us = rng.randint(0, n_users, n_ev)
+    its = rng.randint(0, n_items, n_ev)
+    tss = rng.randint(0, 5 * DAY, n_ev)
+    store.extend(us, its, tss)
+    rts.extend(us, its, tss)
+    srv = InjectionServer(
+        eng,
+        FeatureInjector(InjectionConfig(policy="inject",
+                                        feature_len=feature_len), store, rts),
+        ServerConfig(slate_len=4, cache_entries=n_users))
+
+    now = 5 * DAY + 100
+    print(f"\nserving loop: warmed {srv.warm(np.arange(n_users), now)} "
+          f"prefill states (daily-job precompute)")
+    users = np.arange(8)
+    store.extend(users, (users * 3) % n_items, np.full(8, now - 10))
+    rts.extend(users, (users * 3) % n_items, np.full(8, now - 10))
+    res = srv.serve(users, now)
+    print(f"request wave: hits={res.cache_hits} misses={res.cache_misses} "
+          f"(fresh events injected, no re-prefill)")
+    res2 = srv.serve(users, now + DAY)  # snapshot rolls -> invalidation
+    print(f"next day:     hits={res2.cache_hits} misses={res2.cache_misses} "
+          f"(generation rolled, states rebuilt)")
+    print(f"slates (first 3 users): {res2.slate[:3].tolist()}")
 
 
 if __name__ == "__main__":

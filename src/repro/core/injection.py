@@ -24,7 +24,7 @@ Policies (selected per A/B arm):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -73,6 +73,45 @@ class FeatureInjector:
             return self.merge((b_items, b_ts, b_valid),
                               (r_items, r_ts, r_valid))
         raise ValueError(f"unknown injection policy {c.policy!r}")
+
+    # ------------------------------------------------------------------
+    def generation(self, now: int) -> int:
+        """Snapshot generation serving at ``now`` (-1 before the first
+        snapshot). The serving loop keys its prefill-state cache on this:
+        a rolled generation changes the batch features, so every cached
+        batch-history model state built from the old generation is stale."""
+        snap = self.batch.latest_snapshot_ts(now)
+        return -1 if snap is None else snap
+
+    def fresh_suffix(self, users: np.ndarray, now: int,
+                     ) -> List[List[Tuple[int, int]]]:
+        """Per-user fresh-event suffixes for incremental (token-level)
+        injection: realtime events visible at ``now`` that the serving
+        snapshot cannot contain (ts >= snapshot cutoff), ascending time.
+
+        Exact duplicate deliveries — same (item, ts) pair, the realtime
+        service's at-least-once redelivery — are dropped; re-watches of an
+        item at a *different* ts are kept (they are real events, and token
+        injection, unlike the feature-level ``merge``, preserves repeats).
+        """
+        if self.realtime is None:
+            return [[] for _ in range(len(users))]
+        cutoff = self.generation(now)
+        r_items, r_ts, r_valid = self.realtime.lookup(users, now)
+        out: List[List[Tuple[int, int]]] = []
+        for row in range(len(users)):
+            seen = set()
+            evs: List[Tuple[int, int]] = []
+            for i, t, v in zip(r_items[row], r_ts[row], r_valid[row]):
+                if not v or t < cutoff:
+                    continue
+                pair = (int(i), int(t))
+                if pair in seen:
+                    continue
+                seen.add(pair)
+                evs.append(pair)
+            out.append(evs)
+        return out
 
     # ------------------------------------------------------------------
     def merge(self, batch: Features, recent: Features) -> Features:

@@ -75,6 +75,16 @@ def history_merge_pallas(batch_items, batch_ts, batch_valid,
     lr = rt_items.shape[1]
     k = out_len
 
+    # A zero-length side (empty realtime buffer / empty batch window) would
+    # give a zero-width BlockSpec, which pallas rejects; widen it to one
+    # all-invalid column — the validity flags make the extra event inert.
+    if lb == 0:
+        z = jnp.zeros((b, 1), jnp.int32)
+        batch_items, batch_ts, batch_valid, lb = z, z, z, 1
+    if lr == 0:
+        z = jnp.zeros((b, 1), jnp.int32)
+        rt_items, rt_ts, rt_valid, lr = z, z, z, 1
+
     row = lambda L: pl.BlockSpec((1, L), lambda bb: (bb, 0))
     return pl.pallas_call(
         functools.partial(_merge_kernel, lb=lb, lr=lr, k=k),

@@ -48,6 +48,36 @@ def history_merge_ref(batch_items, batch_ts, batch_valid,
     return out_i, out_t, out_v
 
 
+def history_merge_python_padded(batch_items, batch_ts, batch_valid,
+                                rt_items, rt_ts, rt_valid, *, out_len: int,
+                                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pure-python reference with the *kernel's* padded-array contract.
+
+    Same inputs/outputs as ``history_merge`` (all (B, L) int arrays in,
+    three (B, out_len) int32 arrays out, right-aligned ascending time) but
+    computed row-by-row through ``history_merge_python`` — no jnp, no
+    vectorization tricks, so it is an independent ground truth for the
+    differential sweep (pallas vs xla vs this)."""
+    arrs = [np.asarray(a) for a in (batch_items, batch_ts, batch_valid,
+                                    rt_items, rt_ts, rt_valid)]
+    b = arrs[0].shape[0]
+    k = out_len
+    out_i = np.zeros((b, k), np.int32)
+    out_t = np.zeros((b, k), np.int32)
+    out_v = np.zeros((b, k), np.int32)
+    for row in range(b):
+        batch = [(int(i), int(t)) for i, t, v in
+                 zip(arrs[0][row], arrs[1][row], arrs[2][row]) if v]
+        rt = [(int(i), int(t)) for i, t, v in
+              zip(arrs[3][row], arrs[4][row], arrs[5][row]) if v]
+        merged = history_merge_python(batch, rt, k)
+        for slot, (item, ts) in zip(range(k - len(merged), k), merged):
+            out_i[row, slot] = item
+            out_t[row, slot] = ts
+            out_v[row, slot] = 1
+    return out_i, out_t, out_v
+
+
 def history_merge_python(batch: List[Tuple[int, int]], rt: List[Tuple[int, int]],
                          out_len: int) -> List[Tuple[int, int]]:
     """Plain-python ground truth over (item, ts) event lists.

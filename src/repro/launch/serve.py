@@ -9,6 +9,13 @@ Demonstrates the three-phase request path (DESIGN.md §2):
 
 and prints per-phase timings, showing injection costs O(suffix) rather
 than O(history).
+
+``--loop`` instead drives the **end-to-end serving loop** (feature
+stores -> injector -> prefill-state cache -> engine) for a few rounds of
+interleaved ingest/serve traffic and prints throughput plus cache stats:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
+      --loop --users 500 --rounds 4
 """
 from __future__ import annotations
 
@@ -18,6 +25,62 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+DAY = 86400
+
+
+def run_loop(cfg, params, args) -> None:
+    """Interleaved ingest/serve rounds through the InjectionServer."""
+    from repro.core.feature_store import (BatchFeatureStore,
+                                          FeatureStoreConfig)
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.loop import InjectionServer, ServerConfig
+
+    n_users, n_items = args.users, cfg.vocab_size - 256
+    feature_len = min(args.history, 64)
+    eng = ServingEngine(cfg, params, ServingConfig(
+        max_batch=args.batch, prefill_len=args.history,
+        inject_len=args.fresh,
+        cache_capacity=args.history + args.fresh + 64))
+    rng = np.random.RandomState(args.seed)
+
+    store = BatchFeatureStore(FeatureStoreConfig(
+        n_users=n_users, feature_len=feature_len))
+    rts = RealtimeFeatureService(RealtimeConfig(
+        n_users=n_users, buffer_len=16, ingest_latency=0))
+    n_ev = n_users * 16
+    us = rng.randint(0, n_users, n_ev)
+    its = rng.randint(0, n_items, n_ev)
+    tss = rng.randint(0, 5 * DAY, n_ev)
+    store.extend(us, its, tss)
+    rts.extend(us, its, tss)
+    inj = FeatureInjector(InjectionConfig(
+        policy=args.policy, feature_len=feature_len), store, rts)
+    srv = InjectionServer(eng, inj, ServerConfig(
+        slate_len=4, cache_entries=n_users))
+
+    now = 5 * DAY + 100
+    t0 = time.time()
+    warmed = srv.warm(np.arange(n_users), now)
+    print(f"warm: {warmed} prefill states in {time.time() - t0:.1f}s "
+          f"(incl. compile)")
+    for r in range(args.rounds):
+        u = rng.randint(0, n_users, 64)
+        it = rng.randint(0, n_items, 64)
+        t = np.full(64, now - 30)
+        store.extend(u, it, t)
+        rts.extend(u, it, t)
+        q = rng.randint(0, n_users, args.batch * 4)
+        t0 = time.time()
+        res = srv.serve(q, now)
+        dt = time.time() - t0
+        print(f"round {r}: {len(q)} reqs in {dt * 1e3:6.1f}ms "
+              f"({len(q) / dt:7.1f} req/s) hits={res.cache_hits} "
+              f"misses={res.cache_misses} slate[0]={res.slate[0].tolist()}")
+        now += 60
+    print(f"stats: {srv.stats()}")
 
 
 def main() -> None:
@@ -29,6 +92,12 @@ def main() -> None:
     ap.add_argument("--fresh", type=int, default=8)
     ap.add_argument("--decode-steps", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--loop", action="store_true",
+                    help="drive the end-to-end InjectionServer loop")
+    ap.add_argument("--users", type=int, default=200)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--policy", default="inject",
+                    choices=["batch", "inject", "fresh"])
     args = ap.parse_args()
 
     from repro.configs.base import get_config, reduced
@@ -40,6 +109,10 @@ def main() -> None:
         cfg = reduced(cfg)
     params = init_params(cfg, jax.random.PRNGKey(args.seed),
                          dtype=jnp.float32)
+
+    if args.loop:
+        run_loop(cfg, params, args)
+        return
 
     scfg = ServingConfig(max_batch=args.batch, prefill_len=args.history,
                          inject_len=args.fresh,

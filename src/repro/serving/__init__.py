@@ -1,2 +1,4 @@
 from repro.serving.engine import (  # noqa: F401
     ServingConfig, ServingEngine, make_serve_step)
+from repro.serving.loop import (  # noqa: F401
+    InjectionServer, PrefillStateCache, ServeResult, ServerConfig)

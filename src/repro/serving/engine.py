@@ -63,11 +63,19 @@ class ServingEngine:
         buffer position, so one uniform ``next_pos`` covers the batch);
         inject suffixes are LEFT-aligned (real tokens contiguous from the
         row's ``next_pos`` — RoPE distances stay exact per row).
+
+        Raises ``ValueError`` when more than ``max_batch`` sequences are
+        passed — silently dropping requests is a serving bug; callers with
+        larger waves must pane-split (see serving/loop.py).
         """
         b = self.scfg.max_batch
+        if len(seqs) > b:
+            raise ValueError(
+                f"{len(seqs)} sequences exceed max_batch={b}; split the "
+                f"request wave into panes of at most {b} rows")
         toks = np.zeros((b, length), np.int32)
         valid = np.zeros((b, length), bool)
-        for i, s in enumerate(seqs[:b]):
+        for i, s in enumerate(seqs):
             s = list(s)[-length:]
             if not s:
                 continue

@@ -1,0 +1,380 @@
+"""End-to-end injection serving loop — the system the paper describes.
+
+This connects the pieces the repo already has into one request path
+(PAPER.md §III-B, ROADMAP north star):
+
+    features:  FeatureInjector (BatchFeatureStore + RealtimeFeatureService)
+    tokens:    items_to_tokens (item i -> token i+1, pad -> 0)
+    model:     ServingEngine.prefill / inject / finalize / decode
+
+The cost structure is the paper's whole point: the *batch* history of a
+user changes only when the daily snapshot rolls, so its model state
+(prefill KV/SSM cache) is cacheable across requests. ``InjectionServer``
+keeps a **prefill-state cache** keyed by ``(user, snapshot generation)``;
+a request for a cached user pays only
+
+    inject(fresh suffix) + decode          (O(Δ) per request)
+
+instead of
+
+    prefill(full history) + decode         (O(history) per request)
+
+Cache mechanics:
+  * admission on miss — the miss rows of a pane are prefilled in one
+    fixed-shape batch and inserted per user;
+  * LRU eviction over a configurable entry budget (each entry is one
+    user's sequence-form prefill state: O(prefill_len) KV per attention
+    layer, O(1) state per SSM layer);
+  * generation invalidation — when ``maybe_run_due_snapshots`` rolls the
+    snapshot generation, every cached state was built from now-stale batch
+    features; the key includes the generation (stale entries can never be
+    *served*) and the whole old generation is purged eagerly (memory is
+    released immediately, not on LRU pressure).
+
+Requests are grouped into fixed-shape panes of ``max_batch`` rows (the
+engine jits one shape per entry point); short panes are padded with a
+repeat of row 0 and the padding rows are discarded from the outputs.
+
+The ``policy`` mirrors ``InjectionConfig``: "batch" (stale features,
+control arm), "inject" (cached state + fresh-suffix injection — the
+paper), "fresh" (features recomputed at the request cutoff; inherently
+uncacheable, the oracle upper bound). ``use_cache=False`` degrades
+"inject" to full-prefill-per-request — the baseline the serving benchmark
+compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.injection import FeatureInjector
+from repro.core.pipeline import items_to_tokens
+from repro.serving.engine import ServingEngine
+
+
+# ----------------------------------------------------------------------
+# Prefill-state cache
+# ----------------------------------------------------------------------
+
+class PrefillStateCache:
+    """LRU cache: (user, generation) -> one user's prefill state.
+
+    An entry holds the sequence-form engine state sliced to one row
+    (cache leaves keep their leading layer-repeat axis; batch axis 1 has
+    extent 1) plus the prefill's last-position logits — the next-item
+    scores when the request carries no fresh suffix.
+    """
+
+    def __init__(self, budget: int):
+        if budget < 1:
+            raise ValueError(f"cache budget must be >= 1, got {budget}")
+        self.budget = budget
+        self._entries: "OrderedDict[Tuple[int, int], Dict[str, Any]]" = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple[int, int]) -> bool:
+        return key in self._entries
+
+    def get(self, user: int, gen: int) -> Optional[Dict[str, Any]]:
+        entry = self._entries.get((user, gen))
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end((user, gen))
+        self.hits += 1
+        return entry
+
+    def put(self, user: int, gen: int, entry: Dict[str, Any]) -> None:
+        self._entries[(user, gen)] = entry
+        self._entries.move_to_end((user, gen))
+        while len(self._entries) > self.budget:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate_except(self, gen: int) -> int:
+        """Purge every entry from a generation other than ``gen``."""
+        stale = [k for k in self._entries if k[1] != gen]
+        for k in stale:
+            del self._entries[k]
+        self.invalidations += len(stale)
+        return len(stale)
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "invalidations": self.invalidations}
+
+
+# ----------------------------------------------------------------------
+# Server
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    slate_len: int = 4            # items decoded per request
+    cache_entries: int = 4096     # LRU budget (user-generation states)
+    use_cache: bool = True        # False -> full prefill per request
+    run_batch_jobs: bool = True   # roll due snapshots inside serve()
+
+
+@dataclasses.dataclass
+class ServeResult:
+    scores: np.ndarray            # (N, vocab_padded) next-item logits
+    slate: np.ndarray             # (N, slate_len) greedy token ids
+    cache_hits: int               # rows served from the prefill-state cache
+    cache_misses: int             # rows that paid a prefill this request
+
+
+class InjectionServer:
+    """The full request path, one call: ``serve(users, now)``."""
+
+    def __init__(self, engine: ServingEngine, injector: FeatureInjector,
+                 cfg: ServerConfig = ServerConfig()):
+        self.engine = engine
+        self.injector = injector
+        self.cfg = cfg
+        self.cache = PrefillStateCache(cfg.cache_entries)
+        self._gen = None  # generation the cache was last validated against
+        self.requests = 0
+        self.panes = 0
+        self.prefill_calls = 0
+        self.inject_calls = 0
+        self.decode_steps = 0
+
+    # ------------------------------------------------------------------
+    def _sync_generation(self, now: int) -> int:
+        """Roll due snapshots and purge cache entries the roll staled."""
+        if self.cfg.run_batch_jobs:
+            self.injector.batch.maybe_run_due_snapshots(now)
+        gen = self.injector.generation(now)
+        if gen != self._gen:
+            self.cache.invalidate_except(gen)
+            self._gen = gen
+        return gen
+
+    def warm(self, users: Sequence[int], now: int) -> int:
+        """Cache-warming pass: admit ``users``' batch-history prefill
+        states without serving — the post-snapshot precompute a daily job
+        runs so live traffic starts on the inject-only path. Returns the
+        number of states prefilled. No-op when caching is off or the
+        policy is uncacheable. Clamped to the first ``cache_entries``
+        users (pass highest-priority users first) — warming past the
+        budget would prefill states that LRU-evict before they serve."""
+        users = np.asarray(users, np.int64).ravel()[:self.cache.budget]
+        if not self.cfg.use_cache or self.injector.cfg.policy == "fresh":
+            return 0
+        gen = self._sync_generation(now)
+        before = self.cache.misses
+        b = self.engine.scfg.max_batch
+        for lo in range(0, len(users), b):
+            self._lookup_or_admit(users[lo:lo + b], now, gen)
+        return self.cache.misses - before
+
+    def serve(self, users: Sequence[int], now: int) -> ServeResult:
+        users = np.asarray(users, np.int64).ravel()
+        gen = self._sync_generation(now)
+        b = self.engine.scfg.max_batch
+
+        # Cache-aware batching: group the wave into pure-hit panes (pay
+        # inject-only) and miss panes (pay one admission prefill each)
+        # instead of slicing in arrival order — one cold row in a pane of
+        # hits would otherwise drag the whole pane onto the prefill path.
+        # Rows are independent, so regrouping cannot change any result;
+        # outputs are scattered back to arrival order.
+        cacheable = self.cfg.use_cache and self.injector.cfg.policy != "fresh"
+        if cacheable and len(users) > b:
+            is_miss = np.array([(int(u), gen) not in self.cache
+                                for u in users])
+            order = np.argsort(is_miss, kind="stable")  # hits first
+        else:
+            order = np.arange(len(users))
+
+        scores = np.zeros((len(users), self.engine.cfg.vocab_padded),
+                          np.float32)
+        slates = np.zeros((len(users), self.cfg.slate_len), np.int32)
+        hits0, miss0 = self.cache.hits, self.cache.misses
+        for lo in range(0, len(users), b):  # pane-split: never drop rows
+            idx = order[lo:lo + b]
+            s, sl = self._serve_pane(users[idx], now, gen)
+            scores[idx] = s[:len(idx)]
+            slates[idx] = sl[:len(idx)]
+            self.panes += 1
+        self.requests += len(users)
+        return ServeResult(
+            scores=scores, slate=slates,
+            cache_hits=self.cache.hits - hits0,
+            cache_misses=self.cache.misses - miss0)
+
+    # ------------------------------------------------------------------
+    # Feature -> token assembly
+    # ------------------------------------------------------------------
+
+    def _history_tokens(self, pane: np.ndarray, now: int) -> List[List[int]]:
+        """Per-row batch-history token lists under the injector's policy."""
+        inj = self.injector
+        if inj.cfg.policy == "fresh":
+            items, _, valid = inj.batch.lookup_at_cutoff(pane, now)
+        else:  # "batch" and "inject" share the snapshot prefix
+            items, _, valid = inj.batch.lookup(pane, now)
+        toks = items_to_tokens(items, valid)
+        return [toks[r][valid[r] > 0].tolist() for r in range(len(pane))]
+
+    def _suffix_tokens(self, pane: np.ndarray, now: int) -> List[List[int]]:
+        if self.injector.cfg.policy != "inject":
+            return [[] for _ in range(len(pane))]
+        suffixes = self.injector.fresh_suffix(pane, now)
+        # cap at inject_len newest events so the cached and full-prefill
+        # paths see identical token streams (pad_tokens would otherwise
+        # truncate them at different lengths)
+        cap = self.engine.scfg.inject_len
+        return [items_to_tokens(
+            np.asarray([item for item, _ in evs[-cap:]], np.int64),
+            np.ones(len(evs[-cap:]), np.int64)).tolist() for evs in suffixes]
+
+    # ------------------------------------------------------------------
+    # Pane execution
+    # ------------------------------------------------------------------
+
+    def _serve_pane(self, pane: np.ndarray, now: int, gen: int,
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        eng = self.engine
+        suffix = self._suffix_tokens(pane, now)
+        cacheable = self.cfg.use_cache and self.injector.cfg.policy != "fresh"
+        if not cacheable:
+            hists = self._history_tokens(pane, now)
+            # truncate history to prefill_len BEFORE appending the suffix —
+            # exactly what the cached path's prefill pane sees — so both
+            # paths run identical token streams even when the feature
+            # history is longer than prefill_len
+            p = eng.scfg.prefill_len
+            streams = [h[-p:] + s for h, s in zip(hists, suffix)]
+            toks, valid = eng.pad_tokens(streams, p + eng.scfg.inject_len)
+            state = eng.prefill(toks, valid)
+            self.prefill_calls += 1
+            first = state["logits"][:, -1]
+            return self._decode_slate(state, first)
+
+        entries = self._lookup_or_admit(pane, now, gen)
+        state = _cat_rows(entries, eng.scfg.max_batch)
+        last = jnp.stack([e["last_logits"] for e in _pad_list(
+            entries, eng.scfg.max_batch)])
+        if any(suffix):
+            stoks, svalid = eng.pad_tokens(suffix, eng.scfg.inject_len,
+                                           align="left")
+            state = eng.inject(state, stoks, svalid)
+            self.inject_calls += 1
+            n_valid = svalid.sum(-1)
+            idx = jnp.asarray(np.maximum(n_valid - 1, 0))
+            rows = jnp.arange(state["logits"].shape[0])
+            injected = state["logits"][rows, idx]  # last *valid* suffix pos
+            first = jnp.where(jnp.asarray(n_valid > 0)[:, None],
+                              injected, last)
+        else:
+            first = last
+        return self._decode_slate(state, first)
+
+    def _lookup_or_admit(self, pane: np.ndarray, now: int, gen: int,
+                         ) -> List[Dict[str, Any]]:
+        """Return per-row cache entries, prefilling the misses in one
+        fixed-shape batch (one prefill per pane worst case)."""
+        eng = self.engine
+        entries: Dict[int, Dict[str, Any]] = {}
+        miss_users: List[int] = []
+        for u in pane.tolist():
+            # probe once per ROW (not per unique user) so hit/miss counters
+            # stay in request units even when a pane repeats a user; the
+            # admission list itself is deduplicated below
+            e = self.cache.get(u, gen)
+            if e is None:
+                if u not in miss_users:
+                    miss_users.append(u)
+            else:
+                entries[u] = e
+        if miss_users:
+            hists = self._history_tokens(np.asarray(miss_users), now)
+            toks, valid = eng.pad_tokens(hists, eng.scfg.prefill_len)
+            state = eng.prefill(toks, valid)
+            self.prefill_calls += 1
+            for j, u in enumerate(miss_users):
+                entry = _slice_row(state, j)
+                self.cache.put(u, gen, entry)
+                entries[u] = entry
+        return [entries[u] for u in pane.tolist()]
+
+    def _decode_slate(self, state: Dict[str, Any], first_logits,
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """finalize -> greedy slate: feed each decoded item back in.
+        Already-slated items are masked per row — a slate recommends
+        ``slate_len`` *distinct* items."""
+        eng = self.engine
+        b = self.engine.scfg.max_batch
+        dec = eng.finalize(state)
+        chosen = np.zeros((b, self.engine.cfg.vocab_padded), bool)
+
+        def pick(logits):
+            tok = np.asarray(eng.sample(
+                jnp.where(jnp.asarray(chosen), -1e30, logits)))
+            chosen[np.arange(b), tok] = True
+            return tok
+
+        slate = [pick(first_logits)]
+        for _ in range(self.cfg.slate_len - 1):
+            logits, dec = eng.decode(dec, slate[-1][:, None])
+            self.decode_steps += 1
+            slate.append(pick(logits))
+        return (np.asarray(first_logits, np.float32),
+                np.stack(slate, axis=1))
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        return {"requests": self.requests, "panes": self.panes,
+                "prefill_calls": self.prefill_calls,
+                "inject_calls": self.inject_calls,
+                "decode_steps": self.decode_steps,
+                "cache": self.cache.stats()}
+
+
+# ----------------------------------------------------------------------
+# Per-row state plumbing (batch axis of every cache leaf is axis 1;
+# verified for attention K/V, SSM conv/state and the Jamba hybrid)
+# ----------------------------------------------------------------------
+
+def _slice_row(state: Dict[str, Any], row: int) -> Dict[str, Any]:
+    """Extract one row of a batched sequence-form prefill state."""
+    return {
+        "caches": jax.tree.map(lambda x: x[:, row:row + 1], state["caches"]),
+        "valid": state["valid"][row:row + 1],
+        "next_pos": state["next_pos"][row:row + 1],
+        "last_logits": state["logits"][row, -1],
+    }
+
+
+def _pad_list(entries: List[Dict[str, Any]], b: int) -> List[Dict[str, Any]]:
+    if not entries:
+        raise ValueError("empty pane")
+    return entries + [entries[0]] * (b - len(entries))
+
+
+def _cat_rows(entries: List[Dict[str, Any]], b: int) -> Dict[str, Any]:
+    """Assemble per-user entries into one max_batch engine state (short
+    panes padded by repeating row 0; padding rows are discarded later)."""
+    rows = _pad_list(entries, b)
+    return {
+        "caches": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                               *[e["caches"] for e in rows]),
+        "valid": jnp.concatenate([e["valid"] for e in rows], axis=0),
+        "next_pos": jnp.concatenate([e["next_pos"] for e in rows], axis=0),
+        "logits": None,  # per-row slices don't keep full prefill logits
+    }

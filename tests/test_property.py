@@ -50,6 +50,54 @@ def test_history_merge_properties(batch, rt, k):
     assert len(got) <= k
 
 
+_ENGINES = {}
+
+
+def _property_engine(arch):
+    """One shared tiny engine per arch (jit caches reused across examples)."""
+    if arch not in _ENGINES:
+        from repro.configs.base import get_config, reduced
+        from repro.models.model import init_params
+        from repro.serving.engine import ServingConfig, ServingEngine
+        cfg = reduced(get_config(arch), d_model=64)
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+        eng = ServingEngine(cfg, params, ServingConfig(
+            max_batch=2, prefill_len=16, inject_len=8, cache_capacity=48))
+        _ENGINES[arch] = eng
+    return _ENGINES[arch]
+
+
+tok_seq = st.lists(st.integers(1, 500), min_size=0, max_size=12)
+suffix_seq = st.lists(st.integers(1, 500), min_size=0, max_size=6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(h0=tok_seq, h1=tok_seq, s0=suffix_seq, s1=suffix_seq)
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-780m"])
+def test_prefill_inject_equals_full_prefill(arch, h0, h1, s0, s1):
+    """engine.prefill(hist) -> inject(suffix) must produce the same
+    next-token logits as one full prefill of hist + suffix, for one
+    attention and one SSM arch — including empty suffixes and rows with
+    empty history (the merge/inject path's correctness contract)."""
+    eng = _property_engine(arch)
+    hists, suffixes = [h0, h1], [s0, s1]
+
+    toks, valid = eng.pad_tokens(hists, 16)
+    st_ = eng.prefill(toks, valid)
+    stoks, svalid = eng.pad_tokens(suffixes, 8, align="left")
+    injected = eng.inject(st_, stoks, svalid)
+    n_valid = svalid.sum(-1)
+    rows = np.arange(2)
+    got = jnp.where(jnp.asarray(n_valid > 0)[:, None],
+                    injected["logits"][rows, np.maximum(n_valid - 1, 0)],
+                    st_["logits"][:, -1])
+
+    ftoks, fvalid = eng.pad_tokens([h + s for h, s in zip(hists, suffixes)], 24)
+    want = eng.prefill(ftoks, fvalid)["logits"][:, -1]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-3, rtol=2e-3)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.floats(-3, 3), min_size=1, max_size=12))
 def test_segsum_telescopes(xs):

@@ -113,14 +113,15 @@ def test_pad_tokens_truncation_keeps_tail():
     assert valid[0].all()
 
 
-def test_pad_tokens_drops_rows_beyond_max_batch():
-    """Inputs past max_batch are silently dropped (shape stays fixed)."""
+def test_pad_tokens_raises_beyond_max_batch():
+    """Inputs past max_batch raise instead of silently dropping requests —
+    callers with larger waves must pane-split (serving/loop.py does)."""
     _, _, eng = _engine("llama3.2-1b")  # max_batch=2
-    toks, valid = eng.pad_tokens([[1], [2], [3], [4]], 8)
+    with pytest.raises(ValueError, match="max_batch"):
+        eng.pad_tokens([[1], [2], [3], [4]], 8)
+    # exactly max_batch still fine
+    toks, valid = eng.pad_tokens([[1], [2]], 8)
     assert toks.shape == (2, 8)
-    np.testing.assert_array_equal(toks[0, -1:], [1])
-    np.testing.assert_array_equal(toks[1, -1:], [2])
-    assert 3 not in toks and 4 not in toks
 
 
 def test_pad_tokens_left_alignment():
