@@ -17,6 +17,10 @@ Sections
   serving            end-to-end InjectionServer: cached-inject vs
                      full-prefill-per-request under interleaved ingest at
                      1k/10k users (writes BENCH_serving.json)
+  serving_sharded    the same loop data-parallel over 1/2/8-device
+                     ("data","model") meshes — rps scaling + sharded-vs-
+                     single-device equivalence (writes
+                     BENCH_serving_sharded.json)
 """
 from __future__ import annotations
 
@@ -28,6 +32,13 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+if any("serving_sharded" in a for a in sys.argv):  # also --suite=… form
+    # the dry-run's forced-host-device trick: the sharded suite simulates
+    # its 8-device mesh on one CPU. Must land in XLA_FLAGS before the
+    # first jax init (the import right below), so it keys off argv.
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -467,6 +478,239 @@ def bench_serving(smoke: bool = False, out_path: str = None):
 
 
 # ----------------------------------------------------------------------
+def bench_serving_sharded(smoke: bool = False, out_path: str = None):
+    """Data-parallel InjectionServer over 1 → 2 → 8 simulated devices.
+
+    Same model/feature plane as the ``serving`` suite. **Strong
+    scaling**: every mesh runs the identical serving configuration —
+    ``max_batch=64`` panes, identical request stream (256-request waves,
+    hot-user locality, warmed cache, interleaved ingest) — and only the
+    ("data","model") mesh underneath changes: (1,1)/(2,1)/(8,1) built
+    from forced host devices, so each pane splits into 64/32/8 rows per
+    device. rps is total requests over summed serve() wall time.
+
+    Identical pane shapes also make the equivalence check exact: the
+    widest mesh must serve the same slates as the 1-device mesh (serving
+    params are replicated over data and the partitioned programs are
+    collective-free).
+
+    Two scaling numbers are recorded, because simulated devices share
+    this host's CPU cores:
+
+    * ``wallclock_scaling_1_to_8`` — raw same-config wall-clock ratio.
+      All 8 simulated devices contend for the same few cores (CI runners
+      have 2-4), and a single device's XLA programs already engage the
+      shared intra-op thread pool, so this is hard-capped near 1 by
+      construction — it measures the host's core budget, not the
+      sharding design.
+    * ``rps_scaling_1_to_8`` (headline) — **isolated-shard scaling**.
+      The serving programs are verified collective-free (the bench
+      compiles the dp=8 inject/slate programs and records the collective
+      instruction count in the JSON — it must be 0), so one device's
+      shard computation is completely independent of its peers; on real
+      multi-chip hardware the wave's wall time is one shard's wall time.
+      The bench therefore *measures* a single shard serving its
+      1/8 slice of the wave on a dedicated device (same per-device rows
+      as the dp=8 mesh, own feature-plane slice of host work) and
+      reports wave_time(1 device, full wave) / wave_time(one isolated
+      shard) — the same simulate-what-the-host-can't methodology as
+      launch/dryrun.py's 512 fake devices.
+    """
+    print("\n== serving_sharded (data-parallel serving loop, CPU mesh) ==")
+    from repro.configs.base import ModelConfig
+    from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.model import init_params
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.loop import InjectionServer, ServerConfig
+
+    assert len(jax.devices()) >= 8, \
+        "serving_sharded needs the forced-host-device XLA flag (set at " \
+        "module import when this suite is on the command line)"
+
+    n_items = 4000
+    feature_len = 240
+    max_batch = 64
+    n_users = 500 if smoke else 2_000
+    ev_per_user = 32 if smoke else 128
+    mesh_sizes = [1, 8] if smoke else [1, 2, 8]
+    rounds = 2 if smoke else 8
+    wave = 256  # requests per serve() call = 4 panes at max_batch=64
+
+    cfg = ModelConfig(
+        name="itfi-ranker-bench", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=n_items + 256,
+        rope_theta=10000.0, tie_embeddings=True)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+    def build(dp, mb=max_batch):
+        eng = ServingEngine(cfg, params, ServingConfig(
+            max_batch=mb, prefill_len=256, inject_len=16,
+            cache_capacity=512), mesh=make_serving_mesh(dp, 1))
+        rng = np.random.RandomState(0)
+        n = n_users * ev_per_user
+        store = BatchFeatureStore(FeatureStoreConfig(
+            n_users=n_users, feature_len=feature_len))
+        rts = RealtimeFeatureService(RealtimeConfig(
+            n_users=n_users, buffer_len=8, ingest_latency=0))
+        us = rng.randint(0, n_users, n).astype(np.int64)
+        its = rng.randint(0, n_items, n).astype(np.int64)
+        tss = rng.randint(0, 5 * DAY, n).astype(np.int64)
+        store.extend(us, its, tss)
+        rts.extend(us, its, tss)
+        inj = FeatureInjector(InjectionConfig(
+            policy="inject", feature_len=feature_len), store, rts)
+        return InjectionServer(eng, inj, ServerConfig(
+            slate_len=4, cache_entries=4096))
+
+    def req_users(rng, size):
+        hot = max(n_users // 10, 1)
+        pick_hot = rng.rand(size) < 0.8
+        return np.where(pick_hot, rng.randint(0, hot, size),
+                        rng.randint(0, n_users, size))
+
+    def workload(srv, wave_n=None):
+        wave_n = wave_n or wave
+        rng = np.random.RandomState(1)
+        now = 5 * DAY + 100
+
+        def ingest_wave():
+            u = req_users(rng, 64)
+            it = rng.randint(0, n_items, 64)
+            t = np.full(64, now - 30)
+            srv.injector.batch.extend(u, it, t)
+            srv.injector.realtime.extend(u, it, t)
+
+        srv.warm(np.arange(n_users), now)
+        ingest_wave()
+        srv.serve(req_users(rng, wave_n), now)  # compile everything untimed
+        lat = []
+        for _ in range(rounds):
+            ingest_wave()
+            q = req_users(rng, wave_n)
+            t0 = time.perf_counter()
+            srv.serve(q, now)
+            lat.append(time.perf_counter() - t0)
+            now += 60
+        return np.asarray(lat)
+
+    def run_one(dp, mb, tag, wave_n=None):
+        srv = build(dp, mb)
+        lat = workload(srv, wave_n)
+        wave_n = wave_n or wave
+        rps = rounds * wave_n / lat.sum()
+        row = {
+            "data": dp, "model": 1, "max_batch": mb,
+            "wave_requests": wave_n, "rounds": rounds, "rps": float(rps),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "cache": srv.cache.stats(),
+        }
+        print(f"  {tag:>16s} {mb:9d} {wave_n:5d} {rps:8.1f} "
+              f"{row['p50_ms']:6.1f}ms {row['p99_ms']:7.1f}ms "
+              f"{row['cache']['bytes_per_shard']:12d}")
+        return row
+
+    results = {"meshes": []}
+    print(f"  {'mesh':>16s} {'max_batch':>9s} {'wave':>5s} {'req/s':>8s} "
+          f"{'p50':>8s} {'p99':>9s} {'bytes/shard':>12s}")
+    for dp in mesh_sizes:
+        results["meshes"].append(run_one(dp, max_batch, f"{dp}x1"))
+    r0, rN = results["meshes"][0], results["meshes"][-1]
+    results["wallclock_scaling_1_to_8"] = rN["rps"] / r0["rps"]
+
+    # Isolated-shard scaling: one dp=8 shard = an independent program on
+    # 1/8 of the pane (verified collective-free below), serving its 1/8
+    # slice of the wave on a dedicated device. wave_time(1 device, full
+    # wave) / wave_time(isolated shard) is the multi-chip scaling this
+    # host's shared cores cannot express as raw wall-clock.
+    shard_rows = max_batch // 8
+    shard = run_one(1, shard_rows, f"shard (1/8 wave)", wave_n=wave // 8)
+    results["isolated_shard"] = shard
+    results["rps_scaling_1_to_8"] = (
+        r0["p50_ms"] / shard["p50_ms"])
+    results["rps_scaling_1_to_8_method"] = (
+        "p50 wave wall-time ratio: full 256-request wave on one device "
+        "vs one shard (1/8 of the pane rows, 1/8 of the wave) on a "
+        "dedicated device. Valid because the partitioned programs carry "
+        "zero collectives (recorded below). Assumes host-side "
+        "feature/pane assembly scales with shards (per-shard frontends, "
+        "user-hash routing); a single-controller deployment where one "
+        "python host assembles every pane is bounded by "
+        "wallclock_scaling_1_to_8 instead.")
+    print(f"  wall-clock scaling 1->{rN['data']} (shared-core host): "
+          f"{results['wallclock_scaling_1_to_8']:.2f}x")
+    print(f"  isolated-shard scaling 1->8 (headline): "
+          f"{results['rps_scaling_1_to_8']:.2f}x")
+
+    # evidence for the isolation argument: the dp=8 partitioned serving
+    # programs must contain ZERO collective ops
+    import re as _re
+    widest = build(mesh_sizes[-1])
+    eng = widest.engine
+    toks, valid = eng.pad_tokens(
+        [[1, 2, 3]] * max_batch, eng.scfg.prefill_len)
+    st = eng.prefill(toks, valid)
+    stoks, svalid = eng.pad_tokens([[4]] * max_batch,
+                                   eng.scfg.inject_len, align="left")
+    fb = np.zeros((max_batch, cfg.vocab_padded), np.float32)
+    s2 = eng.inject(st, stoks, svalid, fallback_logits=fb)
+    eng.decode_slate(s2, s2["first_logits"], 4)
+    fin = eng.finalize(s2)
+    pat = _re.compile(r"all-reduce|all-gather|collective-permute|"
+                      r"all-to-all|reduce-scatter")
+    n_coll = 0
+    for lowered in (
+            eng._prefill.lower(eng.params, jnp.asarray(toks),
+                               jnp.asarray(valid)),
+            eng._slate_fns[4].lower(
+                eng.params, fin["caches"], fin["pos"],
+                eng._place(s2["first_logits"], eng._tok_ns))):
+        n_coll += len(pat.findall(lowered.compile().as_text()))
+    results["collective_ops_in_partitioned_programs"] = n_coll
+    print(f"  collectives in dp={mesh_sizes[-1]} serving programs: "
+          f"{n_coll} (isolation argument holds iff 0)")
+
+    # equivalence: identical request wave on fresh 1-device vs widest mesh
+    s1, s8 = build(1), build(mesh_sizes[-1])
+    rng = np.random.RandomState(2)
+    now = 5 * DAY + 100
+    u, it = req_users(rng, 64), rng.randint(0, n_items, 64)
+    for srv in (s1, s8):
+        srv.injector.batch.extend(u, it, np.full(64, now - 30))
+        srv.injector.realtime.extend(u, it, np.full(64, now - 30))
+    q = req_users(rng, max_batch)
+    a = s1.serve(q, now - 60)  # admit, then hit — exercises the cached path
+    a = s1.serve(q, now)
+    b = s8.serve(q, now - 60)
+    b = s8.serve(q, now)
+    diff = float(np.abs(a.scores - b.scores).max())
+    results["equivalence"] = {
+        "logits_max_abs_diff": diff,
+        "logits_allclose": bool(diff < 2e-3),
+        "slates_equal": bool((a.slate == b.slate).all()),
+    }
+    print(f"  1x1 vs {mesh_sizes[-1]}x1: slates_equal="
+          f"{results['equivalence']['slates_equal']} "
+          f"logits max|Δ|={diff:.2e}")
+
+    default_name = ("BENCH_serving_sharded_smoke.json" if smoke
+                    else "BENCH_serving_sharded.json")
+    out_path = out_path or os.path.join(ROOT, default_name)
+    with open(out_path, "w") as f:
+        json.dump({"suite": "serving_sharded", "smoke": smoke,
+                   "config": {"arch": cfg.name, "max_batch": max_batch,
+                              "prefill_len": 256, "inject_len": 16,
+                              "feature_len": feature_len,
+                              "n_users": n_users, "slate_len": 4},
+                   "results": results}, f, indent=2)
+    print(f"  wrote {os.path.abspath(out_path)}")
+    return results
+
+
+# ----------------------------------------------------------------------
 def bench_roofline():
     print("\n== roofline (dry-run artifacts; baseline -> optimized §Perf) ==")
     files = sorted(glob.glob(os.path.join(ROOT, "experiments", "dryrun",
@@ -510,6 +754,7 @@ SECTIONS = {
     "roofline": bench_roofline,
     "feature_plane": bench_feature_plane,
     "serving": bench_serving,
+    "serving_sharded": bench_serving_sharded,
 }
 
 
@@ -527,7 +772,7 @@ def main() -> None:
     for name, fn in SECTIONS.items():
         if pick and name != pick:
             continue
-        if name in ("feature_plane", "serving"):
+        if name in ("feature_plane", "serving", "serving_sharded"):
             if not pick:  # full-size suites take minutes — run them
                 continue  # explicitly via --suite
             fn(smoke=args.smoke, out_path=args.out)

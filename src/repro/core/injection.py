@@ -20,6 +20,16 @@ Policies (selected per A/B arm):
   * "inject"  — treatment: merged features injected as if batch.
   * "fresh"   — oracle upper bound / latency-ablation λ→0 limit: features
     recomputed from the full log at the request cutoff (no snapshot).
+
+The injector also anchors the serving loop's cache-key invariant
+(serving/loop.py): ``generation(now)`` names the snapshot cutoff whose
+batch features are serving at ``now``, and everything derived from batch
+features — including a user's cached prefill model state — is valid
+exactly as long as that generation is. ``fresh_suffix(users, now)``
+returns the complement: realtime events the serving snapshot *cannot*
+contain (ts >= the generation's cutoff), which is precisely what may be
+token-injected on top of a ``(user, generation)``-keyed cached state
+without double-counting an event that the snapshot already absorbed.
 """
 from __future__ import annotations
 

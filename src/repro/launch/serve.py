@@ -16,20 +16,32 @@ interleaved ingest/serve traffic and prints throughput plus cache stats:
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
       --loop --users 500 --rounds 4
+
+``--mesh data,model`` runs either mode **sharded**: the engine jits with
+NamedSharding in/out specs over a ("data", "model") mesh and request
+panes split over the data axis (``--batch`` must divide it). On CPU the
+launcher reuses the dry-run's forced-host-device XLA trick so e.g.
+``--mesh 8,1 --batch 16`` is runnable (and CI-testable) on one machine:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
+      --loop --mesh 8,1 --batch 16 --users 500 --rounds 4
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+# NOTE: jax is imported inside main(), after --mesh handling — forcing
+# host devices for the CPU multi-device path must precede the first jax
+# device query (same constraint as launch/dryrun.py).
 
 DAY = 86400
 
 
-def run_loop(cfg, params, args) -> None:
+def run_loop(cfg, params, args, mesh=None) -> None:
     """Interleaved ingest/serve rounds through the InjectionServer."""
     from repro.core.feature_store import (BatchFeatureStore,
                                           FeatureStoreConfig)
@@ -43,7 +55,7 @@ def run_loop(cfg, params, args) -> None:
     eng = ServingEngine(cfg, params, ServingConfig(
         max_batch=args.batch, prefill_len=args.history,
         inject_len=args.fresh,
-        cache_capacity=args.history + args.fresh + 64))
+        cache_capacity=args.history + args.fresh + 64), mesh=mesh)
     rng = np.random.RandomState(args.seed)
 
     store = BatchFeatureStore(FeatureStoreConfig(
@@ -98,11 +110,38 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--policy", default="inject",
                     choices=["batch", "inject", "fresh"])
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="run sharded over a data,model mesh (e.g. 8,1); "
+                         "--batch must be a multiple of the data size")
     args = ap.parse_args()
 
+    mesh_shape = None
+    if args.mesh:
+        mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+        if len(mesh_shape) != 2:
+            raise SystemExit("--mesh wants two sizes: data,model")
+        n = mesh_shape[0] * mesh_shape[1]
+        plat = os.environ.get("JAX_PLATFORMS", "")
+        if n > 1 and (not plat or "cpu" in plat):
+            # the dry-run trick: simulate the mesh's devices on one CPU
+            # host (must land in XLA_FLAGS before jax first initializes)
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={n}")
+
+    import jax
+    import jax.numpy as jnp
+
     from repro.configs.base import get_config, reduced
+    from repro.launch.mesh import make_serving_mesh
     from repro.models.model import init_params
     from repro.serving.engine import ServingConfig, ServingEngine
+
+    mesh = None
+    if mesh_shape is not None:
+        mesh = make_serving_mesh(*mesh_shape)
+        print(f"mesh: data={mesh_shape[0]} model={mesh_shape[1]} "
+              f"({len(jax.devices())} devices visible)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -111,13 +150,13 @@ def main() -> None:
                          dtype=jnp.float32)
 
     if args.loop:
-        run_loop(cfg, params, args)
+        run_loop(cfg, params, args, mesh=mesh)
         return
 
     scfg = ServingConfig(max_batch=args.batch, prefill_len=args.history,
                          inject_len=args.fresh,
                          cache_capacity=args.history + args.fresh + 64)
-    eng = ServingEngine(cfg, params, scfg)
+    eng = ServingEngine(cfg, params, scfg, mesh=mesh)
     rng = np.random.RandomState(args.seed)
 
     hists = [list(rng.randint(1, cfg.vocab_size, rng.randint(

@@ -264,14 +264,27 @@ def attention_decode(params, x, pos, cache, cfg: ModelConfig,
 
     q, k_new, v_new = _project_qkv(params, x, pos[:, None], cfg)
     slot = (pos % w).astype(jnp.int32)
-    k = jax.vmap(_ring_write)(cache["k"], k_new[:, 0], slot)
-    v = jax.vmap(_ring_write)(cache["v"], v_new[:, 0], slot)
     stored = cache.get("valid")
     if stored is None:
         stored = jnp.ones((b, w), bool)
-    stored = jax.vmap(
-        lambda row, s: jax.lax.dynamic_update_slice_in_dim(
-            row, jnp.ones((1,), bool), s, axis=0))(stored, slot)
+    if jax.default_backend() == "cpu":
+        # XLA CPU lowers the batched per-row dynamic-update (a scatter)
+        # into a SEQUENTIAL while loop over rows, copying whole cache rows
+        # per iteration — the dominant decode cost at serving batch sizes,
+        # and a cross-row serialization that also defeats data-parallel
+        # meshes. A one-hot blend writes identical values as one
+        # vectorized op. TPU keeps the native scatter: its write is O(1)
+        # per row while the blend would re-stream the whole cache.
+        hit = (jnp.arange(w, dtype=jnp.int32)[None, :] == slot[:, None])
+        k = jnp.where(hit[:, :, None, None], k_new[:, :1], cache["k"])
+        v = jnp.where(hit[:, :, None, None], v_new[:, :1], cache["v"])
+        stored = stored | hit
+    else:
+        k = jax.vmap(_ring_write)(cache["k"], k_new[:, 0], slot)
+        v = jax.vmap(_ring_write)(cache["v"], v_new[:, 0], slot)
+        stored = jax.vmap(
+            lambda row, s: jax.lax.dynamic_update_slice_in_dim(
+                row, jnp.ones((1,), bool), s, axis=0))(stored, slot)
 
     # validity: slot i holds a token iff i <= pos (ring: all slots once full)
     idx = jnp.arange(w, dtype=jnp.int32)[None, :]  # (1,W)

@@ -14,6 +14,23 @@ through the model — O(Δ) cost instead of O(full history):
 sequence dim; SSM conv tails + state); ``finalize`` converts to the
 fixed-capacity ring cache that ``decode`` uses. All entry points are jit'd
 once per shape; the engine pads requests to fixed shapes.
+
+**Sharded serving** (the multi-device path): pass a ``Mesh`` and the
+engine resolves the full `sharding/rules.py` serving bundle once —
+parameters land replicated over the data axes and TP-sharded over the
+model axis (decode-mode layout, FSDP stripped — see
+``rules.serving_pspecs``), request panes shard over the data axes
+(``max_batch`` must divide the data-axis size; checked at construction,
+never discovered as an uneven-sharding error inside jit), and every
+entry point is jit'd with explicit ``in_shardings`` /
+``out_shardings`` so prefill/inject/decode caches stay resident in their
+sharded layout between calls. The ring KV/SSM cache is **donated** into
+``decode`` — its input and output are shape- and sharding-identical, so
+each serve step updates the cache in place instead of doubling its
+footprint (inject/finalize change buffer shapes, seq-grow and seq→ring,
+so their inputs cannot alias and are not donated — XLA frees them at the
+end of the call anyway). On CPU test meshes donation is a no-op; on TPU
+it is the difference between one decode-cache working set and two.
 """
 from __future__ import annotations
 
@@ -24,6 +41,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.model import (cache_from_prefill, decode_step, extend,
@@ -41,17 +59,70 @@ class ServingConfig:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig):
+    def __init__(self, cfg: ModelConfig, params, scfg: ServingConfig,
+                 mesh: Optional[Mesh] = None):
         self.cfg = cfg
-        self.params = params
         self.scfg = scfg
-        self._prefill = jax.jit(functools.partial(
-            _prefill_impl, cfg=cfg, q_chunk=scfg.q_chunk))
-        self._inject = jax.jit(functools.partial(
-            _inject_impl, cfg=cfg, q_chunk=scfg.q_chunk))
-        self._finalize = jax.jit(functools.partial(
-            _finalize_impl, cfg=cfg, capacity=scfg.cache_capacity))
-        self._decode = jax.jit(functools.partial(_decode_impl, cfg=cfg))
+        self.mesh = mesh
+        self._slate_fns: Dict[int, Any] = {}
+        pf = functools.partial(_prefill_impl, cfg=cfg, q_chunk=scfg.q_chunk)
+        inj = functools.partial(_inject_impl, cfg=cfg, q_chunk=scfg.q_chunk)
+        fin = functools.partial(_finalize_impl, cfg=cfg,
+                                capacity=scfg.cache_capacity)
+        dec = functools.partial(_decode_impl, cfg=cfg)
+        if mesh is None:
+            self.data_shards = 1
+            self.params = params
+            self._tok_ns = self._row_ns = self._seq_ns = self._ring_ns = None
+            self._prefill = jax.jit(pf)
+            self._inject = self._inject_fb = jax.jit(inj)
+            self._finalize = jax.jit(fin)
+            self._decode = jax.jit(dec)
+            return
+
+        from repro.sharding.rules import serving_pspecs
+        sp = serving_pspecs(cfg, mesh, scfg.max_batch)
+        self.data_shards = sp.data_shards
+        ns = lambda spec: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec,
+            is_leaf=lambda x: isinstance(x, P))
+        p_ns, tok_ns, row_ns = ns(sp.params), ns(sp.tokens), ns(sp.rows)
+        seq_ns, ring_ns, lg_ns = (ns(sp.seq_caches), ns(sp.ring_caches),
+                                  ns(sp.logits))
+        # Entry points re-place operands with device_put (below): jit
+        # in_shardings only *check* committed arrays, they don't reshard
+        # them — and the serving loop legitimately hands us host-assembled
+        # states (per-user LRU rows concatenated into a pane).
+        self._tok_ns, self._row_ns = tok_ns, row_ns
+        self._seq_ns, self._ring_ns = seq_ns, ring_ns
+        self._param_ns = p_ns
+        # Parameters move to their sharded layout ONCE, here — every jit
+        # below then sees them already placed (no per-call transfer).
+        self.params = jax.device_put(params, p_ns)
+        # in_shardings double as device_put: numpy panes from pad_tokens
+        # and host-assembled cache states get scattered to the mesh at the
+        # call boundary; out_shardings pin the returned caches to the same
+        # layout the next entry point consumes, so nothing round-trips.
+        self._prefill = jax.jit(
+            pf, in_shardings=(p_ns, tok_ns, tok_ns),
+            out_shardings=(lg_ns, seq_ns))
+        inj_out = {"caches": seq_ns, "logits": lg_ns, "valid": tok_ns,
+                   "next_pos": row_ns, "n_valid": row_ns,
+                   "last_valid_logits": tok_ns}
+        self._inject = jax.jit(
+            inj,
+            in_shardings=(p_ns, seq_ns, tok_ns, tok_ns, tok_ns, row_ns),
+            out_shardings=inj_out)
+        self._inject_fb = jax.jit(
+            inj,
+            in_shardings=(p_ns, seq_ns, tok_ns, tok_ns, tok_ns, row_ns,
+                          tok_ns),
+            out_shardings={**inj_out, "first_logits": tok_ns})
+        self._finalize = jax.jit(
+            fin, in_shardings=(seq_ns, tok_ns), out_shardings=ring_ns)
+        self._decode = jax.jit(
+            dec, in_shardings=(p_ns, ring_ns, tok_ns, row_ns),
+            out_shardings=(lg_ns, ring_ns), donate_argnums=(1,))
 
     # ------------------------------------------------------------------
     def pad_tokens(self, seqs, length: int, align: str = "right",
@@ -88,6 +159,15 @@ class ServingEngine:
         return toks, valid
 
     # ------------------------------------------------------------------
+    def _place(self, x, ns):
+        """Reshard ``x`` to its serving layout (no-op off-mesh / already
+        placed). device_put, not in_shardings: committed arrays — LRU rows
+        concatenated host-side into a pane — need an actual transfer."""
+        if self.mesh is None or x is None:
+            return x
+        return jax.device_put(x, ns)
+
+    # ------------------------------------------------------------------
     def prefill(self, tokens, valid) -> Dict[str, Any]:
         """Materialize the batch-history state (the daily-job analogue).
 
@@ -95,8 +175,8 @@ class ServingEngine:
         subsequent inject/decode positions continue at ``buf_len`` —
         relative distances between real tokens are exact under RoPE.
         """
-        tokens = jnp.asarray(tokens)
-        valid = jnp.asarray(valid)
+        tokens = self._place(jnp.asarray(tokens), self._tok_ns)
+        valid = self._place(jnp.asarray(valid), self._tok_ns)
         logits, caches = self._prefill(self.params, tokens, valid)
         b, s = tokens.shape
         return {"caches": caches, "valid": valid,
@@ -105,29 +185,78 @@ class ServingEngine:
                 "logits": logits}
 
     def inject(self, state: Dict[str, Any], suffix_tokens, suffix_valid,
-               ) -> Dict[str, Any]:
+               fallback_logits=None) -> Dict[str, Any]:
         """Incremental prefill of fresh events against a cached state —
         the paper's injection: O(suffix) compute, model untouched.
-        Suffix must be LEFT-aligned (see pad_tokens)."""
-        sv = jnp.asarray(suffix_valid)
-        logits, caches = self._inject(
-            self.params, state["caches"], jnp.asarray(suffix_tokens),
-            sv, state["valid"], state["next_pos"])
-        return {"caches": caches,
-                "valid": jnp.concatenate([state["valid"], sv], axis=1),
-                "next_pos": state["next_pos"] + sv.sum(-1).astype(jnp.int32),
-                "logits": logits}
+        Suffix must be LEFT-aligned (see pad_tokens).
+
+        All state bookkeeping (valid concat, next_pos advance, per-row
+        last-*valid*-position logit extraction) happens inside the jit —
+        eager follow-up ops on the sharded outputs were a measurable
+        serve-path cost. Extra keys vs prefill state: ``n_valid`` (real
+        suffix length per row) and ``last_valid_logits`` (the next-item
+        scores after the row's final real event). When
+        ``fallback_logits`` (B, Vp) is given — the pre-inject scores —
+        the result also carries ``first_logits``: last-valid scores for
+        rows with a real suffix, the fallback for empty rows."""
+        args = [self.params,
+                self._place(state["caches"], self._seq_ns),
+                self._place(jnp.asarray(suffix_tokens), self._tok_ns),
+                self._place(jnp.asarray(suffix_valid), self._tok_ns),
+                self._place(state["valid"], self._tok_ns),
+                self._place(state["next_pos"], self._row_ns)]
+        if fallback_logits is None:
+            return self._inject(*args)
+        return self._inject_fb(
+            *args, self._place(jnp.asarray(fallback_logits), self._tok_ns))
 
     def finalize(self, state: Dict[str, Any]) -> Dict[str, Any]:
         """Sequence-form state -> fixed-capacity ring cache for decode."""
-        caches = self._finalize(state["caches"], state["valid"])
-        return {"caches": caches, "pos": state["next_pos"]}
+        caches = self._finalize(self._place(state["caches"], self._seq_ns),
+                                self._place(state["valid"], self._tok_ns))
+        return {"caches": caches,
+                "pos": self._place(state["next_pos"], self._row_ns)}
 
     def decode(self, dec: Dict[str, Any], tokens) -> Tuple[jnp.ndarray, Dict]:
         """One serve step: tokens (B,1) -> (logits (B,Vp), updated dec)."""
-        logits, caches = self._decode(self.params, dec["caches"],
-                                      jnp.asarray(tokens), dec["pos"])
+        logits, caches = self._decode(
+            self.params,
+            self._place(dec["caches"], self._ring_ns),
+            self._place(jnp.asarray(tokens), self._tok_ns),
+            self._place(dec["pos"], self._row_ns))
         return logits[:, 0], {"caches": caches, "pos": dec["pos"] + 1}
+
+    def decode_slate(self, state: Dict[str, Any], first_logits,
+                     slate_len: int) -> np.ndarray:
+        """finalize + a greedy distinct-item slate in ONE jit call.
+
+        The per-token python loop (mask → argmax → decode → sync) used to
+        dominate the serve hot path with eager-op dispatch; here the whole
+        slate runs as a ``lax.scan`` over ``slate_len - 1`` decode steps
+        with the already-chosen mask kept on device. Greedy only: a
+        ``temperature > 0`` engine raises rather than silently serving
+        greedy slates (sampled slate decode is not implemented).
+        Returns int32 (B, slate_len); each row's items are distinct.
+        """
+        if self.scfg.temperature > 0:
+            raise NotImplementedError(
+                "decode_slate is greedy-only; sampled slate decode "
+                f"(temperature={self.scfg.temperature}) is not implemented "
+                "— drive decode()/sample() directly for sampled serving")
+        dec = self.finalize(state)
+        fn = self._slate_fns.get(slate_len)
+        if fn is None:
+            impl = functools.partial(_slate_impl, cfg=self.cfg,
+                                     slate_len=slate_len)
+            if self.mesh is None:
+                fn = jax.jit(impl)
+            else:
+                fn = jax.jit(impl, in_shardings=(
+                    self._param_ns, self._ring_ns, self._row_ns,
+                    self._tok_ns), out_shardings=self._tok_ns)
+            self._slate_fns[slate_len] = fn
+        first = self._place(jnp.asarray(first_logits), self._tok_ns)
+        return np.asarray(fn(self.params, dec["caches"], dec["pos"], first))
 
     def sample(self, logits, rng=None) -> jnp.ndarray:
         if self.scfg.temperature <= 0:
@@ -144,10 +273,34 @@ def _prefill_impl(params, tokens, valid, *, cfg, q_chunk):
     return prefill(params, cfg, tokens, valid=valid, q_chunk=q_chunk)
 
 
-def _inject_impl(params, caches, tokens, valid, prefix_valid, start, *,
-                 cfg, q_chunk):
-    return extend(params, cfg, caches, tokens, start,
-                  valid=valid, prefix_valid=prefix_valid, q_chunk=q_chunk)
+def _inject_impl(params, caches, tokens, valid, prefix_valid, start,
+                 fallback_logits=None, *, cfg, q_chunk):
+    logits, caches = extend(params, cfg, caches, tokens, start,
+                            valid=valid, prefix_valid=prefix_valid,
+                            q_chunk=q_chunk)
+    n_valid = valid.sum(-1).astype(jnp.int32)
+    # logits at each row's last REAL suffix position (left-aligned
+    # suffixes: position n_valid - 1; clamped for empty rows, whose value
+    # is meaningless — callers gate on n_valid > 0). Selected by one-hot
+    # contraction, not logits[rows, idx]: a batch-dependent gather makes
+    # GSPMD all-gather the whole (B,Ss,V) logits across the data axis.
+    sel = (jnp.arange(logits.shape[1], dtype=jnp.int32)[None, :]
+           == jnp.maximum(n_valid - 1, 0)[:, None])
+    last_valid = jnp.einsum("bs,bsv->bv", sel.astype(logits.dtype), logits)
+    out = {
+        "caches": caches, "logits": logits,
+        "valid": jnp.concatenate([prefix_valid, valid], axis=1),
+        "next_pos": start + n_valid,
+        "n_valid": n_valid,
+        "last_valid_logits": last_valid,
+    }
+    if fallback_logits is not None:
+        # next-item scores per row: after the last real fresh event, or
+        # the caller-supplied pre-inject scores when the row's suffix is
+        # empty — computed here so the serve loop never syncs logits
+        out["first_logits"] = jnp.where(
+            (n_valid > 0)[:, None], last_valid, fallback_logits)
+    return out
 
 
 def _finalize_impl(caches, valid, *, cfg, capacity):
@@ -156,6 +309,37 @@ def _finalize_impl(caches, valid, *, cfg, capacity):
 
 def _decode_impl(params, caches, tokens, pos, *, cfg):
     return decode_step(params, cfg, caches, tokens, pos)
+
+
+def _slate_impl(params, caches, pos, first, *, cfg, slate_len):
+    """Greedy slate of ``slate_len`` distinct items as one traced loop.
+
+    Matches the retired host loop operation-for-operation: pick from the
+    current logits with already-chosen items masked, then advance decode —
+    ``slate_len - 1`` decode steps total (the last pick needs no advance).
+    """
+    vocab_iota = jnp.arange(first.shape[-1], dtype=jnp.int32)
+
+    def pick(logits, mask):
+        tok = jnp.argmax(jnp.where(mask, -1e30, logits),
+                         axis=-1).astype(jnp.int32)
+        # mark via one-hot compare, NOT a scatter: a scatter's indices
+        # force GSPMD to all-gather inside the decode loop (a cross-device
+        # sync per step); the compare partitions cleanly over the batch
+        return tok, mask | (vocab_iota[None, :] == tok[:, None])
+
+    def step(carry, _):
+        caches, pos, logits, mask = carry
+        tok, mask = pick(logits, mask)
+        nxt, caches = decode_step(params, cfg, caches, tok[:, None], pos)
+        return (caches, pos + 1, nxt[:, 0], mask), tok
+
+    mask0 = jnp.zeros(first.shape, bool)
+    (_, _, logits, mask), toks = jax.lax.scan(
+        step, (caches, pos, first, mask0), None, length=slate_len - 1)
+    last, _ = pick(logits, mask)
+    return jnp.concatenate(
+        [jnp.moveaxis(toks, 0, 1), last[:, None]], axis=1)
 
 
 # ----------------------------------------------------------------------

@@ -19,21 +19,41 @@ instead of
 
     prefill(full history) + decode         (O(history) per request)
 
+The **cache-key invariant**: an entry keyed ``(user, generation)`` is a
+pure function of (that user's event log at the generation's snapshot
+cutoff, the model parameters). Neither request time nor fresh events
+enter the key — fresh events ride in through ``inject`` per request and
+are never written back into the cached state. That is what makes a hit
+safe to serve at any ``now`` within the generation, and it is why the
+key MUST carry the generation: the same user's batch history differs
+across snapshot cutoffs, so a ``(user,)``-keyed cache would silently
+serve yesterday's state after the daily job rolls.
+
 Cache mechanics:
   * admission on miss — the miss rows of a pane are prefilled in one
     fixed-shape batch and inserted per user;
-  * LRU eviction over a configurable entry budget (each entry is one
-    user's sequence-form prefill state: O(prefill_len) KV per attention
-    layer, O(1) state per SSM layer);
+  * LRU eviction over a configurable entry budget and an optional
+    per-shard byte budget (each entry is one user's sequence-form prefill
+    state: O(prefill_len) KV per attention layer, O(1) state per SSM
+    layer; on a data-parallel mesh the pane-resident working set divides
+    across shards, so accounting is per shard — see PrefillStateCache);
   * generation invalidation — when ``maybe_run_due_snapshots`` rolls the
     snapshot generation, every cached state was built from now-stale batch
     features; the key includes the generation (stale entries can never be
-    *served*) and the whole old generation is purged eagerly (memory is
-    released immediately, not on LRU pressure).
+    *served*), and the whole old generation is additionally purged
+    **eagerly** rather than waiting for LRU pressure: stale entries can
+    never hit again (their key embeds a dead generation), so every byte
+    they hold is pure waste — and under an entry-count budget they would
+    otherwise evict *live* entries while they aged out.
 
 Requests are grouped into fixed-shape panes of ``max_batch`` rows (the
 engine jits one shape per entry point); short panes are padded with a
 repeat of row 0 and the padding rows are discarded from the outputs.
+Because every pane is padded to exactly ``max_batch`` — and a sharded
+engine validates ``max_batch`` against the mesh's data-axis size at
+construction — uneven hit/miss splits can never produce a pane shape
+that recompiles or shards unevenly: the pane shape is a constant of the
+server's lifetime, on one device or sixty-four.
 
 The ``policy`` mirrors ``InjectionConfig``: "batch" (stale features,
 control arm), "inject" (cached state + fresh-suffix injection — the
@@ -68,14 +88,33 @@ class PrefillStateCache:
     (cache leaves keep their leading layer-repeat axis; batch axis 1 has
     extent 1) plus the prefill's last-position logits — the next-item
     scores when the request carries no fresh suffix.
+
+    Eviction runs over two budgets: an entry count (``budget``) and an
+    optional **per-shard byte** budget (``byte_budget``). Byte accounting
+    is per data-parallel shard because that is the unit that must fit in
+    one device's HBM: a single-row entry is replicated host-side, but the
+    moment rows are assembled into a pane and shipped to a ``dp``-way
+    mesh, each shard holds ``1/dp`` of the pane — so an entry's
+    accountable size is ``ceil(nbytes / shards)``. ``shards`` is the
+    engine's data-axis size (1 on a single device, making per-shard ==
+    total).
     """
 
-    def __init__(self, budget: int):
+    def __init__(self, budget: int, byte_budget: Optional[int] = None,
+                 shards: int = 1):
         if budget < 1:
             raise ValueError(f"cache budget must be >= 1, got {budget}")
+        if byte_budget is not None and byte_budget < 1:
+            raise ValueError(
+                f"byte budget must be >= 1 when set, got {byte_budget}")
         self.budget = budget
-        self._entries: "OrderedDict[Tuple[int, int], Dict[str, Any]]" = \
+        self.byte_budget = byte_budget
+        self.shards = max(int(shards), 1)
+        # value = (entry, per-shard bytes); bytes memoized at put() time so
+        # eviction/statistics never re-walk the state pytree
+        self._entries: "OrderedDict[Tuple[int, int], Tuple[Dict[str, Any], int]]" = \
             OrderedDict()
+        self.bytes_per_shard = 0      # current resident total, per shard
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -87,34 +126,56 @@ class PrefillStateCache:
     def __contains__(self, key: Tuple[int, int]) -> bool:
         return key in self._entries
 
+    @staticmethod
+    def entry_nbytes(entry: Dict[str, Any]) -> int:
+        """Logical bytes of one cached state (all array leaves)."""
+        return sum(x.nbytes for x in jax.tree.leaves(entry)
+                   if hasattr(x, "nbytes"))
+
     def get(self, user: int, gen: int) -> Optional[Dict[str, Any]]:
-        entry = self._entries.get((user, gen))
-        if entry is None:
+        rec = self._entries.get((user, gen))
+        if rec is None:
             self.misses += 1
             return None
         self._entries.move_to_end((user, gen))
         self.hits += 1
-        return entry
+        return rec[0]
+
+    def _pop_lru(self) -> None:
+        _, (_, nb) = self._entries.popitem(last=False)
+        self.bytes_per_shard -= nb
+        self.evictions += 1
 
     def put(self, user: int, gen: int, entry: Dict[str, Any]) -> None:
-        self._entries[(user, gen)] = entry
+        nb = -(-self.entry_nbytes(entry) // self.shards)  # ceil div
+        old = self._entries.get((user, gen))
+        if old is not None:
+            self.bytes_per_shard -= old[1]
+        self._entries[(user, gen)] = (entry, nb)
         self._entries.move_to_end((user, gen))
+        self.bytes_per_shard += nb
         while len(self._entries) > self.budget:
-            self._entries.popitem(last=False)
-            self.evictions += 1
+            self._pop_lru()
+        while (self.byte_budget is not None and len(self._entries) > 1
+               and self.bytes_per_shard > self.byte_budget):
+            # len > 1: the just-admitted entry always stays — a byte budget
+            # smaller than one entry must still serve the current pane
+            self._pop_lru()
 
     def invalidate_except(self, gen: int) -> int:
         """Purge every entry from a generation other than ``gen``."""
         stale = [k for k in self._entries if k[1] != gen]
         for k in stale:
-            del self._entries[k]
+            self.bytes_per_shard -= self._entries.pop(k)[1]
         self.invalidations += len(stale)
         return len(stale)
 
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,
                 "misses": self.misses, "evictions": self.evictions,
-                "invalidations": self.invalidations}
+                "invalidations": self.invalidations,
+                "bytes_per_shard": self.bytes_per_shard,
+                "shards": self.shards}
 
 
 # ----------------------------------------------------------------------
@@ -125,6 +186,7 @@ class PrefillStateCache:
 class ServerConfig:
     slate_len: int = 4            # items decoded per request
     cache_entries: int = 4096     # LRU budget (user-generation states)
+    cache_bytes: Optional[int] = None  # per-shard byte budget (None = off)
     use_cache: bool = True        # False -> full prefill per request
     run_batch_jobs: bool = True   # roll due snapshots inside serve()
 
@@ -138,14 +200,24 @@ class ServeResult:
 
 
 class InjectionServer:
-    """The full request path, one call: ``serve(users, now)``."""
+    """The full request path, one call: ``serve(users, now)``.
+
+    Works identically on a single device and on a data-parallel mesh: the
+    engine owns all placement (a mesh-constructed ``ServingEngine`` jits
+    with NamedSharding in/out specs), the server only ever builds
+    fixed-shape ``max_batch`` panes — which the engine has already
+    validated against the mesh's data-axis size — so the loop code has no
+    sharding branches at all.
+    """
 
     def __init__(self, engine: ServingEngine, injector: FeatureInjector,
                  cfg: ServerConfig = ServerConfig()):
         self.engine = engine
         self.injector = injector
         self.cfg = cfg
-        self.cache = PrefillStateCache(cfg.cache_entries)
+        self.cache = PrefillStateCache(cfg.cache_entries,
+                                       byte_budget=cfg.cache_bytes,
+                                       shards=engine.data_shards)
         self._gen = None  # generation the cache was last validated against
         self.requests = 0
         self.panes = 0
@@ -170,16 +242,22 @@ class InjectionServer:
         runs so live traffic starts on the inject-only path. Returns the
         number of states prefilled. No-op when caching is off or the
         policy is uncacheable. Clamped to the first ``cache_entries``
-        users (pass highest-priority users first) — warming past the
-        budget would prefill states that LRU-evict before they serve."""
+        users (pass highest-priority users first), and stops early once
+        the byte budget is full — warming past either budget would
+        prefill states that LRU-evict before they serve."""
         users = np.asarray(users, np.int64).ravel()[:self.cache.budget]
         if not self.cfg.use_cache or self.injector.cfg.policy == "fresh":
             return 0
         gen = self._sync_generation(now)
         before = self.cache.misses
+        ev0 = self.cache.evictions
         b = self.engine.scfg.max_batch
         for lo in range(0, len(users), b):
             self._lookup_or_admit(users[lo:lo + b], now, gen)
+            if self.cache.evictions > ev0:
+                break  # a budget (the byte budget — the entry clamp above
+                #        already bounds entries) is full: further warming
+                #        would only evict states we just paid to prefill
         return self.cache.misses - before
 
     def serve(self, users: Sequence[int], now: int) -> ServeResult:
@@ -268,19 +346,17 @@ class InjectionServer:
 
         entries = self._lookup_or_admit(pane, now, gen)
         state = _cat_rows(entries, eng.scfg.max_batch)
-        last = jnp.stack([e["last_logits"] for e in _pad_list(
+        last = np.stack([e["last_logits"] for e in _pad_list(
             entries, eng.scfg.max_batch)])
         if any(suffix):
             stoks, svalid = eng.pad_tokens(suffix, eng.scfg.inject_len,
                                            align="left")
-            state = eng.inject(state, stoks, svalid)
+            # the cached pre-inject scores ride along as the fallback, so
+            # per-row "last fresh event vs empty suffix" selection happens
+            # inside the inject jit — no logits ever sync to pick them
+            state = eng.inject(state, stoks, svalid, fallback_logits=last)
             self.inject_calls += 1
-            n_valid = svalid.sum(-1)
-            idx = jnp.asarray(np.maximum(n_valid - 1, 0))
-            rows = jnp.arange(state["logits"].shape[0])
-            injected = state["logits"][rows, idx]  # last *valid* suffix pos
-            first = jnp.where(jnp.asarray(n_valid > 0)[:, None],
-                              injected, last)
+            first = state["first_logits"]
         else:
             first = last
         return self._decode_slate(state, first)
@@ -307,35 +383,25 @@ class InjectionServer:
             toks, valid = eng.pad_tokens(hists, eng.scfg.prefill_len)
             state = eng.prefill(toks, valid)
             self.prefill_calls += 1
+            host = _host_state(state)  # one device→host sync per leaf
             for j, u in enumerate(miss_users):
-                entry = _slice_row(state, j)
+                entry = _slice_row(host, j)
                 self.cache.put(u, gen, entry)
                 entries[u] = entry
         return [entries[u] for u in pane.tolist()]
 
     def _decode_slate(self, state: Dict[str, Any], first_logits,
                       ) -> Tuple[np.ndarray, np.ndarray]:
-        """finalize -> greedy slate: feed each decoded item back in.
-        Already-slated items are masked per row — a slate recommends
-        ``slate_len`` *distinct* items."""
+        """finalize -> greedy slate of ``slate_len`` *distinct* items.
+
+        The whole slate (mask chosen → argmax → decode, repeated) runs as
+        one jit call in the engine — the per-token host loop this replaces
+        was the single largest serve-path cost (eager masking + one
+        device sync per decoded item)."""
         eng = self.engine
-        b = self.engine.scfg.max_batch
-        dec = eng.finalize(state)
-        chosen = np.zeros((b, self.engine.cfg.vocab_padded), bool)
-
-        def pick(logits):
-            tok = np.asarray(eng.sample(
-                jnp.where(jnp.asarray(chosen), -1e30, logits)))
-            chosen[np.arange(b), tok] = True
-            return tok
-
-        slate = [pick(first_logits)]
-        for _ in range(self.cfg.slate_len - 1):
-            logits, dec = eng.decode(dec, slate[-1][:, None])
-            self.decode_steps += 1
-            slate.append(pick(logits))
-        return (np.asarray(first_logits, np.float32),
-                np.stack(slate, axis=1))
+        slate = eng.decode_slate(state, first_logits, self.cfg.slate_len)
+        self.decode_steps += self.cfg.slate_len - 1
+        return np.asarray(first_logits, np.float32), slate
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
@@ -349,15 +415,38 @@ class InjectionServer:
 # ----------------------------------------------------------------------
 # Per-row state plumbing (batch axis of every cache leaf is axis 1;
 # verified for attention K/V, SSM conv/state and the Jamba hybrid)
+#
+# Entries are HOST-resident numpy: slicing/assembling panes row-by-row in
+# eager jax ops was the serve path's dominant cost (hundreds of tiny
+# dispatches per pane), while numpy slices/concats are C-speed memcpy.
+# The assembled pane crosses to the device (mesh-sharded, when the engine
+# has one) exactly once, at the next jit boundary — the engine device_puts
+# every operand to its serving layout. On a CPU host this is free (it is
+# all host memory); on TPU it trades HBM residency for PCIe transfer per
+# admission+hit, and the device-resident follow-up is a paged state pool
+# (slot-indexed gather instead of host concat) — see docs/serving.md.
 # ----------------------------------------------------------------------
 
-def _slice_row(state: Dict[str, Any], row: int) -> Dict[str, Any]:
-    """Extract one row of a batched sequence-form prefill state."""
+def _host_state(state: Dict[str, Any]) -> Dict[str, Any]:
+    """Pull a batched sequence-form prefill state to host, whole-pane at a
+    time (one device→host sync per cache leaf, not per row)."""
     return {
-        "caches": jax.tree.map(lambda x: x[:, row:row + 1], state["caches"]),
-        "valid": state["valid"][row:row + 1],
-        "next_pos": state["next_pos"][row:row + 1],
-        "last_logits": state["logits"][row, -1],
+        "caches": jax.tree.map(np.asarray, state["caches"]),
+        "valid": np.asarray(state["valid"]),
+        "next_pos": np.asarray(state["next_pos"]),
+        "last_logits": np.asarray(state["logits"][:, -1]),
+    }
+
+
+def _slice_row(host: Dict[str, Any], row: int) -> Dict[str, Any]:
+    """One row of a host-form pane state, copied so the entry doesn't pin
+    the whole pane's buffers in the LRU."""
+    return {
+        "caches": jax.tree.map(lambda x: x[:, row:row + 1].copy(),
+                               host["caches"]),
+        "valid": host["valid"][row:row + 1].copy(),
+        "next_pos": host["next_pos"][row:row + 1].copy(),
+        "last_logits": host["last_logits"][row].copy(),
     }
 
 
@@ -372,9 +461,9 @@ def _cat_rows(entries: List[Dict[str, Any]], b: int) -> Dict[str, Any]:
     panes padded by repeating row 0; padding rows are discarded later)."""
     rows = _pad_list(entries, b)
     return {
-        "caches": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+        "caches": jax.tree.map(lambda *xs: np.concatenate(xs, axis=1),
                                *[e["caches"] for e in rows]),
-        "valid": jnp.concatenate([e["valid"] for e in rows], axis=0),
-        "next_pos": jnp.concatenate([e["next_pos"] for e in rows], axis=0),
+        "valid": np.concatenate([e["valid"] for e in rows], axis=0),
+        "next_pos": np.concatenate([e["next_pos"] for e in rows], axis=0),
         "logits": None,  # per-row slices don't keep full prefill logits
     }

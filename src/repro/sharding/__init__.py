@@ -1,2 +1,3 @@
 from repro.sharding.rules import (  # noqa: F401
-    ShardingRules, batch_pspec, cache_pspecs, data_axes, param_pspecs)
+    ServingShardings, ShardingRules, batch_pspec, cache_pspecs, data_axes,
+    param_pspecs, seq_cache_pspecs, serving_pspecs)

@@ -250,6 +250,98 @@ def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int,
     return out
 
 
+def seq_cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
+    """PartitionSpec pytree for **sequence-form** caches — the pytree
+    ``prefill``/``extend`` return (and ``extend`` consumes).
+
+    Structurally like :func:`cache_pspecs` but attention layers carry only
+    ``{"k", "v"}`` of shape (R, B, S, nkv, hd): the pad mask travels
+    separately as the engine state's ``valid`` (B, S), so there is no
+    per-layer ``valid`` leaf before ``finalize`` builds the ring cache.
+    Batch (axis 1 of every leaf) shards over the data axes; heads/d_inner
+    shard over the model axis exactly as in the ring layout so ``finalize``
+    is a local reshape, not a resharding collective.
+    """
+    from repro.models.model import pattern_sig
+    r = ShardingRules.make(cfg, mesh, decode=True)
+    bspec = r.dp if _div(batch, r.dp_size) else None
+    hd_tp = r.tpa(cfg.head_dim_) if not _div(cfg.n_kv_heads, r.tp_size) else None
+    kv_tp = r.tp if _div(cfg.n_kv_heads, r.tp_size) else None
+
+    out = {}
+    for p, (kind, _) in enumerate(pattern_sig(cfg)):
+        if kind == "attn":
+            kv = P(None, bspec, None, kv_tp, hd_tp)
+            out[f"pos{p}"] = {"k": kv, "v": kv}
+        else:
+            out[f"pos{p}"] = {
+                "conv_x": P(None, bspec, None, r.tpa(cfg.d_inner)),
+                "conv_B": P(None, bspec, None, None),
+                "conv_C": P(None, bspec, None, None),
+                "state": P(None, bspec, r.tpa(cfg.n_ssm_heads), None, None),
+            }
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingShardings:
+    """Every PartitionSpec the serving engine needs, resolved once.
+
+    ``params`` uses decode-mode rules (attention layout must match the KV
+    cache layout — see ShardingRules.make) with the FSDP data-axis factor
+    **stripped**: serving replicates weights across data-parallel replicas
+    and shards only the request batch + caches over ``data``. FSDP is a
+    training-memory trick — on the serving hot path it would re-gather
+    every weight matrix per layer per token, which is exactly the decode
+    pathology the decode-mode rules exist to avoid. TP sharding (the
+    ``model`` axis) is kept as-is. ``tokens``/``rows`` shard the request
+    batch over the data axes; ``seq_caches``/``ring_caches`` are the
+    prefill/inject and decode cache layouts respectively.
+    """
+    params: Any          # pytree of P matching init_params
+    tokens: P            # (B, S) token/valid planes
+    rows: P              # (B,) per-row scalars (next_pos / pos)
+    logits: P            # (B, S, Vp) and (B, Vp) prefixes
+    seq_caches: Any      # pytree of P matching prefill/extend caches
+    ring_caches: Any     # pytree of P matching init_cache/finalize
+    data_shards: int     # number of data-parallel shards
+
+
+def serving_pspecs(cfg: ModelConfig, mesh: Mesh, max_batch: int,
+                   ) -> ServingShardings:
+    """Resolve the full serving-path sharding bundle for one engine.
+
+    Raises ``ValueError`` when ``max_batch`` does not divide the data-axis
+    size — a pane that shards unevenly would either recompile per shape or
+    fail inside jit, so it is rejected at engine construction instead.
+    """
+    dp = data_axes(mesh)
+    dpn = axis_size(mesh, dp)
+    if max_batch % max(dpn, 1) != 0:
+        raise ValueError(
+            f"max_batch={max_batch} must be a multiple of the data-axis "
+            f"size {dpn} (mesh {dict(mesh.shape)}); panes shard evenly or "
+            f"not at all")
+
+    def strip_dp(spec: P) -> P:
+        """Replace any data-axis factor in a weight spec with replication."""
+        def keep(ax):
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            return None if any(a in dp for a in axes) else ax
+        return P(*[keep(ax) for ax in spec])
+
+    return ServingShardings(
+        params=jax.tree.map(strip_dp, param_pspecs(cfg, mesh, decode=True),
+                            is_leaf=lambda x: isinstance(x, P)),
+        tokens=batch_pspec(mesh, max_batch),
+        rows=P(dp if _div(max_batch, dpn) else None),
+        logits=P(dp if _div(max_batch, dpn) else None),
+        seq_caches=seq_cache_pspecs(cfg, mesh, max_batch),
+        ring_caches=cache_pspecs(cfg, mesh, max_batch),
+        data_shards=dpn,
+    )
+
+
 def opt_pspecs(param_specs: Any) -> Any:
     """Optimizer state mirrors the parameter sharding (ZeRO-for-free)."""
     from repro.training.optimizer import OptState

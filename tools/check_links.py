@@ -1,0 +1,72 @@
+"""Intra-repo markdown link checker (the CI docs job).
+
+Walks every tracked-ish ``*.md`` in the repo, extracts inline links and
+images ``[text](target)``, and fails when a *relative* target doesn't
+exist on disk. External schemes (http/https/mailto), pure-anchor links
+(``#section``), and targets that resolve outside the repo root (e.g. the
+README's GitHub-web badge path ``../../actions/...``) are skipped — this
+gate is about the repo's own docs tree staying internally consistent.
+
+  python tools/check_links.py [root]
+
+Exit 0 when every link resolves, 1 otherwise (each breakage listed).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) / ![alt](target), tolerating titles: (target "title")
+_LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_SCHEME = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules",
+             ".ruff_cache", "experiments"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def check(root: str):
+    root = os.path.abspath(root)
+    broken = []
+    n_links = 0
+    for path in sorted(md_files(root)):
+        text = open(path, encoding="utf-8").read()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if _SCHEME.match(target) or target.startswith("#"):
+                continue
+            target = target.split("#", 1)[0]  # drop the fragment
+            if not target:
+                continue
+            resolved = os.path.abspath(
+                os.path.join(os.path.dirname(path), target))
+            if not (resolved == root or
+                    resolved.startswith(root + os.sep)):
+                continue  # escapes the repo (GitHub-web paths like badges)
+            n_links += 1
+            if not os.path.exists(resolved):
+                line = text[:m.start()].count("\n") + 1
+                broken.append((os.path.relpath(path, root), line, target))
+    return n_links, broken
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else \
+        os.path.join(os.path.dirname(__file__), "..")
+    n_links, broken = check(root)
+    for path, line, target in broken:
+        print(f"BROKEN {path}:{line}: ({target})")
+    print(f"checked {n_links} intra-repo links, {len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

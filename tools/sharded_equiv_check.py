@@ -1,0 +1,102 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+# ^ MUST precede any jax import — the dry-run trick (launch/dryrun.py):
+# jax locks the device count on first init. This script is run as a
+# SUBPROCESS by tests/test_serving_sharded.py precisely so the forced
+# device count never leaks into the main test process (conftest.py
+# asserts it doesn't).
+
+"""Sharded-vs-single-device serving equivalence check.
+
+Builds the same tiny model + feature plane twice — one InjectionServer
+on the plain single-device engine, one on an 8×1 ("data","model") CPU
+mesh — and drives both through interleaved ingest/serve waves including
+LRU-cached hits and a snapshot-generation rollover. Asserts slates are
+IDENTICAL and logits agree within float tolerance at every wave.
+
+  PYTHONPATH=src python tools/sharded_equiv_check.py
+
+Prints ``SHARDED-EQUIV OK`` and exits 0 on success.
+"""
+import sys
+
+import numpy as np
+
+
+def main() -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig
+    from repro.core.feature_store import (BatchFeatureStore,
+                                          FeatureStoreConfig)
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.model import init_params
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.loop import InjectionServer, ServerConfig
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    DAY = 86400
+    n_users, n_items = 40, 300
+    cfg = ModelConfig(name="equiv-test", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=n_items + 256, rope_theta=1e4,
+                      tie_embeddings=True)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    scfg = ServingConfig(max_batch=8, prefill_len=32, inject_len=8,
+                         cache_capacity=64)
+
+    def server(mesh):
+        store = BatchFeatureStore(FeatureStoreConfig(
+            n_users=n_users, feature_len=24))
+        rts = RealtimeFeatureService(RealtimeConfig(
+            n_users=n_users, buffer_len=8, ingest_latency=0))
+        rng = np.random.RandomState(0)
+        u = rng.randint(0, n_users, 1500)
+        i = rng.randint(0, n_items, 1500)
+        t = rng.randint(0, 5 * DAY, 1500)
+        store.extend(u, i, t)
+        rts.extend(u, i, t)
+        inj = FeatureInjector(InjectionConfig(
+            policy="inject", feature_len=24), store, rts)
+        eng = ServingEngine(cfg, params, scfg, mesh=mesh)
+        return InjectionServer(eng, inj, ServerConfig(
+            slate_len=3, cache_entries=64))
+
+    single = server(mesh=None)
+    sharded = server(mesh=make_serving_mesh(8, 1))
+
+    rng = np.random.RandomState(1)
+    now = 5 * DAY + 100
+    # wave 1-3: interleaved ingest/serve inside one generation (misses,
+    # then hits with fresh suffixes); wave 4: past the next snapshot
+    # boundary — generation rollover purges and re-prefills
+    for wave, at in enumerate([now, now + 120, now + 300,
+                               now + DAY + 100]):
+        u = rng.randint(0, n_users, 12)
+        it = rng.randint(0, n_items, 12)
+        ts = np.full(12, at - 40)
+        for srv in (single, sharded):
+            srv.injector.batch.extend(u, it, ts)
+            srv.injector.realtime.extend(u, it, ts)
+        q = rng.randint(0, n_users, 19)  # pane-splits at max_batch=8
+        r1 = single.serve(q, at)
+        r8 = sharded.serve(q, at)
+        assert (r1.slate == r8.slate).all(), \
+            f"wave {wave}: slates diverged\n{r1.slate}\n{r8.slate}"
+        diff = np.abs(r1.scores - r8.scores).max()
+        assert diff < 2e-3, f"wave {wave}: logits max|Δ|={diff}"
+        print(f"wave {wave}: slates equal, logits max|Δ|={diff:.2e}, "
+              f"hits={r8.cache_hits} misses={r8.cache_misses}")
+    assert sharded.cache.hits > 0 and sharded.cache.invalidations > 0
+    assert sharded.cache.shards == 8
+    print("SHARDED-EQUIV OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
