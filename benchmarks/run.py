@@ -21,6 +21,12 @@ Sections
                      ("data","model") meshes — rps scaling + sharded-vs-
                      single-device equivalence (writes
                      BENCH_serving_sharded.json)
+  scheduler          request-level Gateway (per-request submits through
+                     the micro-batching scheduler) vs the legacy wave
+                     path on the same traffic: throughput parity at 100%
+                     hit rate + the per-request queue+serve latency
+                     percentiles only the request API can measure
+                     (writes BENCH_scheduler.json)
 """
 from __future__ import annotations
 
@@ -478,6 +484,249 @@ def bench_serving(smoke: bool = False, out_path: str = None):
 
 
 # ----------------------------------------------------------------------
+def bench_scheduler(smoke: bool = False, out_path: str = None):
+    """Request-level Gateway vs the legacy wave path on the same traffic.
+
+    Three rows per population size, separating two different costs:
+
+      1. ``wave`` — the legacy pre-grouped ``serve(users, now)`` path.
+      2. ``gateway_wave`` — the SAME waves through the request API
+         (``submit_many`` + ``flush``). The scheduler sees the whole
+         wave at once, so it forms the identical panes (incl. the
+         cache-aware hit/miss partitioning): this isolates the
+         facade's own cost (typed requests, tickets, per-request
+         telemetry), which must stay within ~10% of the wave path —
+         the redesign's parity bar.
+      3. ``gateway_trickle`` — per-request ``submit`` at one
+         sim-second per arrival with a pane-deadline of 2*max_batch
+         sim-seconds (pane-full flushes, deadline tail via ``tick``).
+         At 100% hit rate this too is pane-for-pane identical work; at
+         lower hit rates it honestly pays the *scheduling-granularity*
+         cost of latency-bounded micro-batching — an eager pane-full
+         flush never holds more than one pane, so it cannot regroup
+         hits around misses the way a whole-wave drain can, and more
+         panes carry an admission prefill.
+
+    The trickle row is also the one that can measure what a wave API
+    cannot: every request's individual queue+serve wall latency
+    (submit -> response), recorded as req_p50/p99 next to the pane
+    serve latency and the sim-time queue-delay telemetry.
+
+    Rounds are **interleaved across the three paths** (wave round,
+    gateway_wave round, trickle round, repeat): shared CI hosts
+    throttle on a seconds-to-minutes timescale, and sequential
+    per-path measurement hands whole slow windows to one path —
+    interleaving spreads them evenly so the ratios compare serving
+    work, not scheduler luck.
+    """
+    print("\n== scheduler (request-level Gateway vs wave path) ==")
+    import warnings as _warnings
+
+    from repro.configs.base import ModelConfig
+    from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.models.model import init_params
+    from repro.serving.api import Request
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.loop import InjectionServer
+    from repro.serving.scheduler import Gateway, ServerConfig
+
+    n_items = 4000
+    feature_len = 240
+    cfg = ModelConfig(
+        name="itfi-ranker-bench", family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=n_items + 256,
+        rope_theta=10000.0, tie_embeddings=True)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    eng = ServingEngine(cfg, params, ServingConfig(
+        max_batch=16, prefill_len=256, inject_len=16, cache_capacity=512))
+
+    sizes = [1_000] if smoke else [1_000, 10_000]
+    ev_per_user = 64 if smoke else 256
+    rounds = 3 if smoke else 10
+    wave = 64                    # requests per round-wave (4 panes)
+    deadline = 2 * eng.scfg.max_batch  # sim-seconds a request may queue
+
+    def build(n_users):
+        rng = np.random.RandomState(0)
+        n = n_users * ev_per_user
+        store = BatchFeatureStore(FeatureStoreConfig(
+            n_users=n_users, feature_len=feature_len))
+        rts = RealtimeFeatureService(RealtimeConfig(
+            n_users=n_users, buffer_len=8, ingest_latency=0))
+        us = rng.randint(0, n_users, n).astype(np.int64)
+        its = rng.randint(0, n_items, n).astype(np.int64)
+        tss = rng.randint(0, 5 * DAY, n).astype(np.int64)
+        store.extend(us, its, tss)
+        rts.extend(us, its, tss)
+        return FeatureInjector(InjectionConfig(
+            policy="inject", feature_len=feature_len), store, rts)
+
+    def req_users(rng, n_users, size):
+        hot = max(n_users // 10, 1)
+        pick_hot = rng.rand(size) < 0.8
+        return np.where(pick_hot, rng.randint(0, hot, size),
+                        rng.randint(0, n_users, size))
+
+    def ingest(inj_or_gw, rng, n_users, now):
+        u = req_users(rng, n_users, 64)
+        it = rng.randint(0, n_items, 64)
+        t = np.full(64, now - 30)
+        inj = getattr(inj_or_gw, "injector", inj_or_gw)
+        inj.batch.extend(u, it, t)
+        inj.realtime.extend(u, it, t)
+
+    results = []
+    print(f"  {'users':>7s} {'path':>16s} {'req/s':>8s} {'req p50':>9s} "
+          f"{'req p99':>9s} {'pane p50':>9s} {'pane p99':>9s} {'hit%':>6s}")
+    for n_users in sizes:
+        row = {"n_users": n_users, "wave_requests": wave, "rounds": rounds}
+        scfg = ServerConfig(slate_len=4, cache_entries=4096)
+        t00 = 5 * DAY + 100
+
+        # three independent stacks fed identical seeded traffic; their
+        # timed rounds run interleaved (see docstring)
+        srv = InjectionServer(eng, build(n_users), scfg)   # wave
+        gww = Gateway(eng, build(n_users), scfg)           # gateway_wave
+        gwt = Gateway(eng, build(n_users), scfg)           # trickle
+        st_w = {"rng": np.random.RandomState(1), "now": t00, "lat": []}
+        st_gw = {"rng": np.random.RandomState(1), "now": t00, "lat": []}
+        st_tr = {"rng": np.random.RandomState(1), "now": t00,
+                 "req_lat": [], "pane_lat": [], "pending": [],
+                 "t_total": 0.0}
+
+        def wave_round(s, timed=True):
+            ingest(srv.gateway, s["rng"], n_users, s["now"])
+            q = req_users(s["rng"], n_users, wave)
+            t0 = time.perf_counter()
+            srv.serve(q, s["now"])
+            if timed:
+                s["lat"].append(time.perf_counter() - t0)
+            s["now"] += 60
+
+        def gateway_wave_round(s, timed=True):
+            ingest(gww, s["rng"], n_users, s["now"])
+            q = req_users(s["rng"], n_users, wave)
+            t0 = time.perf_counter()
+            gww.submit_many([Request(user=int(u), now=s["now"]) for u in q])
+            gww.flush(s["now"])
+            if timed:
+                s["lat"].append(time.perf_counter() - t0)
+            s["now"] += 60
+
+        def trickle_round(s, timed=True):
+            ingest(gwt, s["rng"], n_users, s["now"])
+            t_seg0 = time.perf_counter()
+            for u in req_users(s["rng"], n_users, wave):
+                t = gwt.submit(Request(user=int(u), now=s["now"],
+                                       deadline=s["now"] + deadline))
+                s["pending"].append(t)
+                s["now"] += 1  # one arrival per sim-second
+                if t.done and timed:  # this submit filled + flushed a pane
+                    done_wall = time.perf_counter()
+                    # the flush ran inside this submit call, so the
+                    # triggering request's submit->done wall time IS the
+                    # pane's serve latency
+                    s["pane_lat"].append(done_wall - t.submitted_wall)
+                    s["req_lat"] += [done_wall - p.submitted_wall
+                                     for p in s["pending"] if p.done]
+                s["pending"] = [p for p in s["pending"] if not p.done]
+            gwt.tick(s["now"] + deadline)  # deadline-flush the tail
+            done_wall = time.perf_counter()
+            if timed:
+                s["t_total"] += done_wall - t_seg0
+                s["req_lat"] += [done_wall - p.submitted_wall
+                                 for p in s["pending"] if p.done]
+            s["pending"] = [p for p in s["pending"] if not p.done]
+            # next round's arrivals start past the tail-flush tick's
+            # clock (now + deadline) — backdated stamps would inflate
+            # the sim-time queue-delay telemetry
+            s["now"] += deadline + 4
+
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("ignore", DeprecationWarning)
+            # untimed: warm every cache, compile every jit
+            for g in (srv, gww, gwt):
+                g.warm(np.arange(n_users), t00)
+            wave_round(st_w, timed=False)
+            gateway_wave_round(st_gw, timed=False)
+            trickle_round(st_tr, timed=False)
+            counters = [(g.cache.hits, g.cache.misses)
+                        for g in (srv, gww, gwt)]
+            for _ in range(rounds):  # timed, interleaved
+                wave_round(st_w)
+                gateway_wave_round(st_gw)
+                trickle_round(st_tr)
+
+        def hit_rate(g, h0m0):
+            hits, misses = g.cache.hits - h0m0[0], g.cache.misses - h0m0[1]
+            return float(hits / max(hits + misses, 1))
+
+        lat = np.asarray(st_w["lat"])
+        row["wave"] = {
+            "rps": float(rounds * wave / lat.sum()),
+            "wave_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "wave_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "hit_rate": hit_rate(srv, counters[0]),
+        }
+        lat = np.asarray(st_gw["lat"])
+        row["gateway_wave"] = {
+            "rps": float(rounds * wave / lat.sum()),
+            "wave_p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "wave_p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "hit_rate": hit_rate(gww, counters[1]),
+        }
+        pane_lat = np.asarray(st_tr["pane_lat"])
+        req_lat = np.asarray(st_tr["req_lat"])
+        st = gwt.stats()
+        row["gateway_trickle"] = {
+            "rps": float(rounds * wave / st_tr["t_total"]),
+            "req_p50_ms": float(np.percentile(req_lat, 50) * 1e3),
+            "req_p99_ms": float(np.percentile(req_lat, 99) * 1e3),
+            "pane_p50_ms": float(np.percentile(pane_lat, 50) * 1e3),
+            "pane_p99_ms": float(np.percentile(pane_lat, 99) * 1e3),
+            "hit_rate": hit_rate(gwt, counters[2]),
+            "queue_delay_sim": st["queue_delay"],
+            "paths": st["paths"], "deadline_flushes": st["deadline_flushes"],
+        }
+        row["facade_ratio"] = (row["gateway_wave"]["rps"]
+                               / row["wave"]["rps"])
+        row["trickle_ratio"] = (row["gateway_trickle"]["rps"]
+                                / row["wave"]["rps"])
+        w, gwv, g = row["wave"], row["gateway_wave"], row["gateway_trickle"]
+        print(f"  {n_users:7d} {'wave':>16s} {w['rps']:8.1f} {'--':>9s} "
+              f"{'--':>9s} {w['wave_p50_ms']:7.1f}ms {w['wave_p99_ms']:7.1f}ms "
+              f"{w['hit_rate'] * 100:5.1f}%")
+        print(f"  {n_users:7d} {'gateway_wave':>16s} {gwv['rps']:8.1f} "
+              f"{'--':>9s} {'--':>9s} {gwv['wave_p50_ms']:7.1f}ms "
+              f"{gwv['wave_p99_ms']:7.1f}ms {gwv['hit_rate'] * 100:5.1f}%")
+        print(f"  {n_users:7d} {'gateway_trickle':>16s} {g['rps']:8.1f} "
+              f"{g['req_p50_ms']:7.1f}ms {g['req_p99_ms']:7.1f}ms "
+              f"{g['pane_p50_ms']:7.1f}ms {g['pane_p99_ms']:7.1f}ms "
+              f"{g['hit_rate'] * 100:5.1f}%")
+        print(f"  {n_users:7d} facade ratio (gateway_wave/wave) = "
+              f"{row['facade_ratio']:.2f} (parity bar: >= 0.90); trickle "
+              f"ratio = {row['trickle_ratio']:.2f}; per-request latency is "
+              f"the column the wave path cannot fill")
+        results.append(row)
+
+    default_name = ("BENCH_scheduler_smoke.json" if smoke
+                    else "BENCH_scheduler.json")
+    out_path = out_path or os.path.join(ROOT, default_name)
+    with open(out_path, "w") as f:
+        json.dump({"suite": "scheduler", "smoke": smoke,
+                   "config": {"arch": cfg.name, "max_batch": eng.scfg.max_batch,
+                              "prefill_len": eng.scfg.prefill_len,
+                              "inject_len": eng.scfg.inject_len,
+                              "feature_len": feature_len, "slate_len": 4,
+                              "deadline_s": deadline},
+                   "results": results}, f, indent=2)
+    print(f"  wrote {os.path.abspath(out_path)}")
+    return results
+
+
+# ----------------------------------------------------------------------
 def bench_serving_sharded(smoke: bool = False, out_path: str = None):
     """Data-parallel InjectionServer over 1 → 2 → 8 simulated devices.
 
@@ -755,6 +1004,7 @@ SECTIONS = {
     "feature_plane": bench_feature_plane,
     "serving": bench_serving,
     "serving_sharded": bench_serving_sharded,
+    "scheduler": bench_scheduler,
 }
 
 
@@ -772,7 +1022,8 @@ def main() -> None:
     for name, fn in SECTIONS.items():
         if pick and name != pick:
             continue
-        if name in ("feature_plane", "serving", "serving_sharded"):
+        if name in ("feature_plane", "serving", "serving_sharded",
+                    "scheduler"):
             if not pick:  # full-size suites take minutes — run them
                 continue  # explicitly via --suite
             fn(smoke=args.smoke, out_path=args.out)

@@ -3,9 +3,10 @@
 Shows the TPU-native injection flow (prefill → inject → decode) on a
 reduced mamba2 — the cheapest-injection family: fresh events advance an
 O(1) recurrent state instead of growing a KV cache (DESIGN.md §4) —
-then the same flow as the *end-to-end serving loop*: feature stores ->
-FeatureInjector -> prefill-state cache -> engine, with cache hits after
-warming and invalidation when the daily snapshot rolls.
+then the same flow end to end through the request-level *Gateway*:
+per-request submits with deadlines and per-request policies/slate
+lengths, feedback events on the same facade, cache hits after warming,
+and invalidation when the daily snapshot rolls.
 
   PYTHONPATH=src python examples/serve_injection.py [--arch mamba2-780m]
 """
@@ -62,15 +63,17 @@ def main():
               f"{[o[row] for o in outs]}")
 
     # ------------------------------------------------------------------
-    # The same flow end to end: stores -> injector -> cached serving loop
+    # The same flow end to end, request by request: the Gateway facade
+    # (typed Request/Response lifecycle + micro-batching scheduler)
     # ------------------------------------------------------------------
     from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
     from repro.core.injection import FeatureInjector, InjectionConfig
     from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
-    from repro.serving.loop import InjectionServer, ServerConfig
+    from repro.serving.api import Event, Request
+    from repro.serving.scheduler import Gateway, ServerConfig
 
     DAY = 86400
-    n_users, n_items, feature_len = 32, cfg.vocab_size - 2, 32
+    n_users, n_items, feature_len = max(32, args.batch), cfg.vocab_size - 2, 32
     store = BatchFeatureStore(FeatureStoreConfig(
         n_users=n_users, feature_len=feature_len))
     rts = RealtimeFeatureService(RealtimeConfig(
@@ -81,25 +84,62 @@ def main():
     tss = rng.randint(0, 5 * DAY, n_ev)
     store.extend(us, its, tss)
     rts.extend(us, its, tss)
-    srv = InjectionServer(
+    gw = Gateway(
         eng,
         FeatureInjector(InjectionConfig(policy="inject",
                                         feature_len=feature_len), store, rts),
         ServerConfig(slate_len=4, cache_entries=n_users))
 
     now = 5 * DAY + 100
-    print(f"\nserving loop: warmed {srv.warm(np.arange(n_users), now)} "
+    print(f"\ngateway: warmed {gw.warm(np.arange(n_users), now)} "
           f"prefill states (daily-job precompute)")
-    users = np.arange(8)
-    store.extend(users, (users * 3) % n_items, np.full(8, now - 10))
-    rts.extend(users, (users * 3) % n_items, np.full(8, now - 10))
-    res = srv.serve(users, now)
-    print(f"request wave: hits={res.cache_hits} misses={res.cache_misses} "
-          f"(fresh events injected, no re-prefill)")
-    res2 = srv.serve(users, now + DAY)  # snapshot rolls -> invalidation
-    print(f"next day:     hits={res2.cache_hits} misses={res2.cache_misses} "
-          f"(generation rolled, states rebuilt)")
-    print(f"slates (first 3 users): {res2.slate[:3].tolist()}")
+
+    # requests trickle in one at a time; feedback events ride along on
+    # the same facade; a full max_batch pane flushes automatically
+    tickets = []
+    for step, u in enumerate(range(args.batch)):
+        gw.observe(Event(user=u, item=(u * 3) % n_items, ts=now + step - 10))
+        # deadline past the last arrival, so the pane flushes on FULL
+        tickets.append(gw.submit(Request(user=u, now=now + step,
+                                         deadline=now + args.batch + 30)))
+    t = tickets[0]
+    tel = t.response.telemetry
+    print(f"pane-full flush: {len(tickets)} arrivals -> pane {tel.pane_id}, "
+          f"user {tel.user} path={tel.path!r} hit={tel.cache_hit} "
+          f"queue_delay={tel.queue_delay}s slate={t.response.slate.tolist()}")
+
+    # a short pane flushes when a deadline fires on the clock instead
+    t1 = now + args.batch + 40
+    late = gw.submit(Request(user=9, now=t1, deadline=t1 + 30,
+                             slate_len=2))  # per-request slate length
+    print(f"queued: pending={gw.pending} (pane not full, deadline not due)")
+    gw.tick(t1 + 30)
+    print(f"deadline flush:  user 9 served slate={late.response.slate.tolist()} "
+          f"(slate_len=2) queue_delay={late.response.telemetry.queue_delay}s")
+
+    # mixed-policy pane: the paper's A/B arms share one pane — the
+    # per-request policy is the arm assignment
+    now = t1 + 30
+    arms = [gw.submit(Request(user=u, now=now + 100,
+                              policy=("inject" if u % 2 else "batch"),
+                              tag=("treatment" if u % 2 else "control")))
+            for u in range(args.batch)]
+    gw.flush()
+    served = {a.response.telemetry.tag for a in arms}
+    print(f"mixed-policy pane: arms {sorted(served)} served together "
+          f"(pane {arms[0].response.telemetry.pane_id})")
+
+    # next day: the snapshot generation rolls on the clock, cached
+    # states invalidate, misses re-prefill from the new snapshot
+    gw.tick(now + DAY)
+    r2 = [gw.submit(Request(user=u, now=now + DAY)) for u in range(8)]
+    gw.flush()
+    miss = sum(not t.response.telemetry.cache_hit for t in r2)
+    print(f"next day: {miss}/8 misses (generation rolled, states rebuilt); "
+          f"slates (first 3): {[t.response.slate.tolist() for t in r2[:3]]}")
+    st = gw.stats()
+    print(f"telemetry: paths={st['paths']} queue_delay_p99="
+          f"{st['queue_delay']['p99']:.0f}s panes={st['panes']}")
 
 
 if __name__ == "__main__":

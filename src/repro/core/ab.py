@@ -43,10 +43,37 @@ from repro.data.loader import LoaderConfig, batches, build_examples
 from repro.data.synthetic import (World, WorldConfig, bootstrap_serve_fn,
                                   events_to_arrays, simulate_day)
 from repro.models.model import init_params
+from repro.serving.api import Request, hash_arm
 from repro.training.optimizer import AdamWConfig, init_opt_state
 from repro.training.train_loop import TrainConfig, train
 
 DAY = 86400
+
+# The paper's §IV arms that share one set of model parameters (M_batch)
+# and differ only in the serving-time feature policy — exactly the pair
+# a request-level deployment serves from ONE fleet via per-request
+# policies (mixed-policy panes) instead of one server per arm.
+ARM_POLICIES = {"control": "batch", "treatment": "inject"}
+
+
+def request_arm(user: int, salt: int = 0) -> str:
+    """Deterministic per-request arm assignment (user-randomized, as in
+    the paper; stable across processes via :func:`hash_arm`)."""
+    return hash_arm(int(user), tuple(ARM_POLICIES), salt)
+
+
+def arm_requests(users, now: int, salt: int = 0) -> List[Request]:
+    """Label a wave of arrivals with their experiment arm: each request
+    carries its arm's serving policy and the arm name as ``tag``, ready
+    for ``Gateway.submit_many`` — control and treatment rows then
+    coexist in the same fixed-shape panes, and the per-arm split is
+    recovered from ``response.telemetry.tag``."""
+    out = []
+    for u in np.asarray(users).ravel():
+        arm = request_arm(int(u), salt)
+        out.append(Request(user=int(u), now=int(now),
+                           policy=ARM_POLICIES[arm], tag=arm))
+    return out
 
 
 def default_sim_model(n_items: int) -> ModelConfig:
@@ -192,13 +219,10 @@ def run_experiment(ab: ABConfig, *, model_cfg: Optional[ModelConfig] = None,
     m1 = train_ranker(all_events, model_cfg, ab, "midnight", log=log)
     plat1 = make_platform(ab, model_cfg, m1, world, all_events,
                           policy="batch")
-    observe1 = plat1.observe
-
-    def observe_and_log(ev):
-        observe1(ev)
-        all_events.append(ev)
-
-    plat1.observe = observe_and_log
+    # the platform-side observe hook (shared with Gateway.observe's event
+    # type): the harness's log collector registers instead of
+    # monkey-patching the observe method
+    plat1.on_observe.append(all_events.append)
     g1 = range(ab.bootstrap_days, ab.bootstrap_days + ab.gen1_days)
     run_arm("gen1", ab, plat1, world, g1, log=log)
 

@@ -21,8 +21,8 @@ Policies (selected per A/B arm):
   * "fresh"   — oracle upper bound / latency-ablation λ→0 limit: features
     recomputed from the full log at the request cutoff (no snapshot).
 
-The injector also anchors the serving loop's cache-key invariant
-(serving/loop.py): ``generation(now)`` names the snapshot cutoff whose
+The injector also anchors the serving path's cache-key invariant
+(serving/scheduler.py): ``generation(now)`` names the snapshot cutoff whose
 batch features are serving at ``now``, and everything derived from batch
 features — including a user's cached prefill model state — is valid
 exactly as long as that generation is. ``fresh_suffix(users, now)``
@@ -87,7 +87,7 @@ class FeatureInjector:
     # ------------------------------------------------------------------
     def generation(self, now: int) -> int:
         """Snapshot generation serving at ``now`` (-1 before the first
-        snapshot). The serving loop keys its prefill-state cache on this:
+        snapshot). The serving gateway keys its prefill-state cache on this:
         a rolled generation changes the batch features, so every cached
         batch-history model state built from the old generation is stale."""
         snap = self.batch.latest_snapshot_ts(now)

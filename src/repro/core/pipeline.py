@@ -123,13 +123,22 @@ class RecommenderPlatform:
         self.run_batch_jobs = run_batch_jobs
         self.mode = mode  # "plain" | "consistent" (paper §IV variant)
         self.serve_calls = 0
+        # registered observers: called with every event AFTER the stores
+        # ingest it. This is the platform-side half of the unified
+        # ingestion hook (Gateway.observe shares the same event duck type:
+        # anything with .user/.item/.ts) — experiment harnesses register
+        # log collectors here instead of monkey-patching observe().
+        self.on_observe: list = []
 
     # -- event plumbing -------------------------------------------------
     def observe(self, ev) -> None:
-        """Platform-side event hooks: offline log + realtime stream."""
+        """Platform-side event hooks: offline log + realtime stream,
+        then any registered ``on_observe`` callbacks."""
         self.injector.batch.append(ev.user, ev.item, ev.ts)
         if self.injector.realtime is not None:
             self.injector.realtime.ingest(ev.user, ev.item, ev.ts)
+        for cb in self.on_observe:
+            cb(ev)
 
     # -- serving ---------------------------------------------------------
     def serve(self, users: np.ndarray, tss: np.ndarray) -> np.ndarray:

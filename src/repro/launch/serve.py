@@ -10,12 +10,19 @@ Demonstrates the three-phase request path (DESIGN.md §2):
 and prints per-phase timings, showing injection costs O(suffix) rather
 than O(history).
 
-``--loop`` instead drives the **end-to-end serving loop** (feature
-stores -> injector -> prefill-state cache -> engine) for a few rounds of
-interleaved ingest/serve traffic and prints throughput plus cache stats:
+``--loop`` instead drives the **request-level Gateway** (feature stores
+-> injector -> prefill-state cache -> engine behind the micro-batching
+scheduler) with a deterministic seeded request trace: arrivals trickle
+in one at a time (``gateway.submit``), feedback events ride along
+between them (``gateway.observe``), panes flush on pane-full or
+deadline (``gateway.tick``), and a per-request A/B split
+(``--ab``: hash-assigned control/treatment arms as per-request
+policies) shares the same panes. Prints per-round throughput plus the
+gateway's structured telemetry summary (paths, queue-delay
+percentiles, cache stats):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
-      --loop --users 500 --rounds 4
+      --loop --users 500 --rounds 4 [--ab]
 
 ``--mesh data,model`` runs either mode **sharded**: the engine jits with
 NamedSharding in/out specs over a ("data", "model") mesh and request
@@ -42,13 +49,17 @@ DAY = 86400
 
 
 def run_loop(cfg, params, args, mesh=None) -> None:
-    """Interleaved ingest/serve rounds through the InjectionServer."""
+    """Deterministic seeded request trace through the Gateway:
+    per-request arrivals interleaved with feedback events, pane-full and
+    deadline flushes, optional per-request A/B arms."""
+    from repro.core.ab import ARM_POLICIES, request_arm
     from repro.core.feature_store import (BatchFeatureStore,
                                           FeatureStoreConfig)
     from repro.core.injection import FeatureInjector, InjectionConfig
     from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.serving.api import Request
     from repro.serving.engine import ServingConfig, ServingEngine
-    from repro.serving.loop import InjectionServer, ServerConfig
+    from repro.serving.scheduler import Gateway, ServerConfig
 
     n_users, n_items = args.users, cfg.vocab_size - 256
     feature_len = min(args.history, 64)
@@ -70,29 +81,63 @@ def run_loop(cfg, params, args, mesh=None) -> None:
     rts.extend(us, its, tss)
     inj = FeatureInjector(InjectionConfig(
         policy=args.policy, feature_len=feature_len), store, rts)
-    srv = InjectionServer(eng, inj, ServerConfig(
+    gw = Gateway(eng, inj, ServerConfig(
         slate_len=4, cache_entries=n_users))
 
     now = 5 * DAY + 100
     t0 = time.time()
-    warmed = srv.warm(np.arange(n_users), now)
+    warmed = gw.warm(np.arange(n_users), now)
     print(f"warm: {warmed} prefill states in {time.time() - t0:.1f}s "
           f"(incl. compile)")
+
+    deadline = args.batch * 2  # seconds an arrival may wait in the queue
+    per_round = args.batch * 4
     for r in range(args.rounds):
-        u = rng.randint(0, n_users, 64)
-        it = rng.randint(0, n_items, 64)
-        t = np.full(64, now - 30)
-        store.extend(u, it, t)
-        rts.extend(u, it, t)
-        q = rng.randint(0, n_users, args.batch * 4)
+        tickets = []
         t0 = time.time()
-        res = srv.serve(q, now)
+        for _ in range(per_round):
+            # the trace interleaves arrivals with feedback events
+            # (~1 event per 4 requests), all from one seeded stream
+            if rng.rand() < 0.25:
+                gw.observe((int(rng.randint(0, n_users)),
+                            int(rng.randint(0, n_items)), now - 30))
+            u = int(rng.randint(0, n_users))
+            if args.ab:
+                arm = request_arm(u, salt=args.seed)
+                req = Request(user=u, now=now, policy=ARM_POLICIES[arm],
+                              tag=arm, deadline=now + deadline)
+            else:
+                req = Request(user=u, now=now, deadline=now + deadline)
+            tickets.append(gw.submit(req))
+            now += 1  # one arrival per second
+        gw.tick(now + deadline)  # let the tail's deadline fire
         dt = time.time() - t0
-        print(f"round {r}: {len(q)} reqs in {dt * 1e3:6.1f}ms "
-              f"({len(q) / dt:7.1f} req/s) hits={res.cache_hits} "
-              f"misses={res.cache_misses} slate[0]={res.slate[0].tolist()}")
-        now += 60
-    print(f"stats: {srv.stats()}")
+        assert all(t.done for t in tickets)
+        hits = sum(t.response.telemetry.cache_hit for t in tickets)
+        qd = np.array([t.response.telemetry.queue_delay for t in tickets])
+        print(f"round {r}: {len(tickets)} reqs in {dt * 1e3:6.1f}ms "
+              f"({len(tickets) / dt:7.1f} req/s) hits={hits} "
+              f"queue-delay p50={np.percentile(qd, 50):.0f}s "
+              f"max={qd.max()}s slate[0]="
+              f"{tickets[0].response.slate.tolist()}")
+        # next round's arrivals must not be stamped behind the clock the
+        # tail-flush tick just advanced to (now + deadline) — a backdated
+        # arrival would inflate its queue-delay telemetry
+        now += max(60, deadline)
+
+    st = gw.stats()
+    if args.ab:
+        by_arm = {}
+        for t in tickets:
+            by_arm.setdefault(t.response.telemetry.tag, 0)
+            by_arm[t.response.telemetry.tag] += 1
+        print(f"last-round arms (mixed panes): {by_arm}")
+    print(f"telemetry: paths={st['paths']} "
+          f"queue_delay p50={st['queue_delay']['p50']:.0f}s "
+          f"p99={st['queue_delay']['p99']:.0f}s "
+          f"deadline_flushes={st['deadline_flushes']} "
+          f"panes={st['panes']}")
+    print(f"stats: {st}")
 
 
 def main() -> None:
@@ -105,11 +150,15 @@ def main() -> None:
     ap.add_argument("--decode-steps", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--loop", action="store_true",
-                    help="drive the end-to-end InjectionServer loop")
+                    help="drive the request-level Gateway with a seeded trace")
     ap.add_argument("--users", type=int, default=200)
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--policy", default="inject",
                     choices=["batch", "inject", "fresh"])
+    ap.add_argument("--ab", action="store_true",
+                    help="--loop: per-request A/B arms (hash-assigned "
+                         "control=batch / treatment=inject policies "
+                         "sharing the same mixed-policy panes)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="run sharded over a data,model mesh (e.g. 8,1); "
                          "--batch must be a multiple of the data size")

@@ -1,4 +1,9 @@
+from repro.serving.api import (  # noqa: F401
+    Event, Request, RequestTelemetry, Response, Ticket, as_event,
+    assign_arms, hash_arm)
 from repro.serving.engine import (  # noqa: F401
     ServingConfig, ServingEngine, make_serve_step)
+from repro.serving.scheduler import (  # noqa: F401
+    Gateway, PrefillStateCache, ServerConfig)
 from repro.serving.loop import (  # noqa: F401
-    InjectionServer, PrefillStateCache, ServeResult, ServerConfig)
+    InjectionServer, ServeResult)

@@ -1,0 +1,186 @@
+"""Typed per-request serving API — the unit of the paper's deployment.
+
+The paper's surface is per-request: a user arrives, their fresh suffix
+is injected, a slate is served. This module is the request-level
+contract the :class:`~repro.serving.scheduler.Gateway` serves:
+
+    Request   — one arrival: (user, now) plus optional per-request
+                policy (the A/B arm), slate_len, deadline, and tag.
+                Frozen; validated at construction so a malformed request
+                fails at the call site, not as a shape error inside jit.
+    Response  — the served slate + next-item scores + structured
+                telemetry for that request.
+    Ticket    — the handle ``submit`` returns; ``.response`` fills in
+                when the scheduler flushes the pane the request rode in.
+    Event     — one feedback event (user watched item at ts); the
+                ingestion type ``Gateway.observe`` and the platform
+                observe hooks share.
+
+Per-request **policy** is what makes the A/B split expressible at
+request granularity (the wave API baked one policy into the server):
+rows with different arms coexist in one fixed-shape pane and are
+resolved at feature-assembly time. ``hash_arm`` is the deterministic
+user->arm assignment an experiment uses to label requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+POLICIES = ("batch", "inject", "fresh")
+
+
+# ----------------------------------------------------------------------
+# Events (ingestion side of the facade)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One feedback event: ``user`` watched ``item`` at ``ts``."""
+    user: int
+    item: int
+    ts: int
+
+
+def as_event(ev) -> Event:
+    """Coerce an event-like value — an :class:`Event`, a ``(user, item,
+    ts)`` tuple, or any object with ``.user/.item/.ts`` attributes (the
+    simulator's event records) — into an :class:`Event`."""
+    if isinstance(ev, Event):
+        return ev
+    if isinstance(ev, (tuple, list)) and len(ev) == 3:
+        return Event(int(ev[0]), int(ev[1]), int(ev[2]))
+    try:
+        return Event(int(ev.user), int(ev.item), int(ev.ts))
+    except AttributeError:
+        raise TypeError(
+            f"cannot interpret {ev!r} as an event; pass an Event, a "
+            f"(user, item, ts) tuple, or an object with .user/.item/.ts")
+
+
+# ----------------------------------------------------------------------
+# Request / Response
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request, validated at construction.
+
+    ``policy``/``slate_len`` default to ``None`` = "use the gateway's
+    configured default" — a request only carries what it overrides.
+    ``deadline`` is an absolute time: the scheduler must flush the
+    request's pane (padding it if short) once its clock reaches it.
+    ``tag`` is free-form caller context (experiment arm label, trace
+    id); it rides through to the telemetry untouched.
+    """
+    user: int
+    now: int
+    policy: Optional[str] = None
+    slate_len: Optional[int] = None
+    deadline: Optional[int] = None
+    tag: Optional[str] = None
+
+    def __post_init__(self):
+        if self.user < 0:
+            raise ValueError(f"user must be >= 0, got {self.user}")
+        if self.policy is not None and self.policy not in POLICIES:
+            raise ValueError(
+                f"unknown policy {self.policy!r}; expected one of "
+                f"{POLICIES} (or None for the gateway default)")
+        if self.slate_len is not None and self.slate_len < 1:
+            raise ValueError(
+                f"slate_len must be >= 1, got {self.slate_len}")
+        if self.deadline is not None and self.deadline < self.now:
+            raise ValueError(
+                f"deadline ({self.deadline}) must be >= the request's "
+                f"arrival time now ({self.now})")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestTelemetry:
+    """Structured per-request observability, attached to every Response.
+
+    ``queue_delay`` is in request-clock units (``served_at - now``):
+    how long the request waited for its pane to fill or its deadline to
+    fire. ``path`` says what the request actually paid:
+
+      * ``"prefill"`` — the row paid a batch-history prefill this
+        request (cache miss, uncacheable policy, or caching disabled);
+      * ``"inject"``  — served from a cached prefill state with a
+        non-empty fresh suffix injected (the paper's hot path);
+      * ``"cached"``  — served from a cached prefill state with no
+        fresh events pending (pure cache read + decode).
+    """
+    request_id: int
+    user: int
+    policy: str
+    slate_len: int
+    pane_id: int
+    queue_delay: int
+    cache_hit: bool
+    path: str
+    generation: int
+    submitted_at: int
+    served_at: int
+    tag: Optional[str] = None
+
+
+@dataclasses.dataclass
+class Response:
+    """What one request gets back: the slate, the scores it was ranked
+    from, and the request's telemetry record."""
+    slate: np.ndarray          # (slate_len,) int32 greedy distinct items
+    scores: np.ndarray         # (vocab_padded,) float32 next-item logits
+    telemetry: RequestTelemetry
+
+
+class Ticket:
+    """Handle for a submitted request; ``response`` fills at flush."""
+
+    __slots__ = ("request", "request_id", "response", "submitted_wall")
+
+    def __init__(self, request: Request, request_id: int,
+                 submitted_wall: float = 0.0):
+        self.request = request
+        self.request_id = request_id
+        self.response: Optional[Response] = None
+        self.submitted_wall = submitted_wall
+
+    @property
+    def done(self) -> bool:
+        return self.response is not None
+
+    def __repr__(self) -> str:
+        state = "done" if self.done else "pending"
+        return (f"Ticket(id={self.request_id}, user={self.request.user}, "
+                f"{state})")
+
+
+# ----------------------------------------------------------------------
+# Per-request A/B arm assignment
+# ----------------------------------------------------------------------
+
+def hash_arm(user: int, arms: Sequence[str] = ("control", "treatment"),
+             salt: int = 0) -> str:
+    """Deterministic user -> arm assignment for request-level A/B.
+
+    Stable across processes (md5, not ``hash()``), uniform over arms,
+    and re-randomizable per experiment via ``salt``. The same user is
+    always in the same arm within one salt — the unit of randomization
+    is the user, as in the paper's experiment — but assignment happens
+    per *request*, which is what lets arms share one serving fleet
+    (mixed-policy panes) instead of one server per arm.
+    """
+    if not arms:
+        raise ValueError("arms must be non-empty")
+    h = hashlib.md5(f"{salt}:{int(user)}".encode()).hexdigest()
+    return arms[int(h, 16) % len(arms)]
+
+
+def assign_arms(users, arms: Sequence[str] = ("control", "treatment"),
+                salt: int = 0) -> Tuple[str, ...]:
+    """Vector form of :func:`hash_arm` over a user array."""
+    return tuple(hash_arm(int(u), arms, salt) for u in np.asarray(users).ravel())

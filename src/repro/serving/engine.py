@@ -91,7 +91,7 @@ class ServingEngine:
                                   ns(sp.logits))
         # Entry points re-place operands with device_put (below): jit
         # in_shardings only *check* committed arrays, they don't reshard
-        # them — and the serving loop legitimately hands us host-assembled
+        # them — and the serving scheduler legitimately hands us host-assembled
         # states (per-user LRU rows concatenated into a pane).
         self._tok_ns, self._row_ns = tok_ns, row_ns
         self._seq_ns, self._ring_ns = seq_ns, ring_ns
@@ -137,7 +137,7 @@ class ServingEngine:
 
         Raises ``ValueError`` when more than ``max_batch`` sequences are
         passed — silently dropping requests is a serving bug; callers with
-        larger waves must pane-split (see serving/loop.py).
+        larger waves must pane-split (see serving/scheduler.py).
         """
         b = self.scfg.max_batch
         if len(seqs) > b:
@@ -227,7 +227,7 @@ class ServingEngine:
         return logits[:, 0], {"caches": caches, "pos": dec["pos"] + 1}
 
     def decode_slate(self, state: Dict[str, Any], first_logits,
-                     slate_len: int) -> np.ndarray:
+                     slate_len: int, row_lens=None) -> np.ndarray:
         """finalize + a greedy distinct-item slate in ONE jit call.
 
         The per-token python loop (mask → argmax → decode → sync) used to
@@ -237,6 +237,16 @@ class ServingEngine:
         ``temperature > 0`` engine raises rather than silently serving
         greedy slates (sampled slate decode is not implemented).
         Returns int32 (B, slate_len); each row's items are distinct.
+
+        ``row_lens`` (B,) enables **per-request slate lengths** inside a
+        fixed-shape pane: the pane still decodes ``slate_len`` (the pane
+        max) steps as one traced program, but every row's slots at
+        ``>= row_lens[row]`` are masked to -1 inside the jit. The first
+        ``row_lens[row]`` items of a row are bitwise identical to what a
+        ``slate_len=row_lens[row]`` decode of that row would have chosen
+        (greedy decode is a prefix-stable sequence), so callers just
+        slice. ``row_lens`` is a traced operand — one compiled program
+        serves every mix of lengths at a given pane max.
         """
         if self.scfg.temperature > 0:
             raise NotImplementedError(
@@ -244,19 +254,30 @@ class ServingEngine:
                 f"(temperature={self.scfg.temperature}) is not implemented "
                 "— drive decode()/sample() directly for sampled serving")
         dec = self.finalize(state)
-        fn = self._slate_fns.get(slate_len)
+        key = slate_len if row_lens is None else ("masked", slate_len)
+        fn = self._slate_fns.get(key)
         if fn is None:
-            impl = functools.partial(_slate_impl, cfg=self.cfg,
+            body = _slate_impl if row_lens is None else _slate_masked_impl
+            impl = functools.partial(body, cfg=self.cfg,
                                      slate_len=slate_len)
             if self.mesh is None:
                 fn = jax.jit(impl)
-            else:
+            elif row_lens is None:
                 fn = jax.jit(impl, in_shardings=(
                     self._param_ns, self._ring_ns, self._row_ns,
                     self._tok_ns), out_shardings=self._tok_ns)
-            self._slate_fns[slate_len] = fn
+            else:
+                fn = jax.jit(impl, in_shardings=(
+                    self._param_ns, self._ring_ns, self._row_ns,
+                    self._tok_ns, self._row_ns), out_shardings=self._tok_ns)
+            self._slate_fns[key] = fn
         first = self._place(jnp.asarray(first_logits), self._tok_ns)
-        return np.asarray(fn(self.params, dec["caches"], dec["pos"], first))
+        if row_lens is None:
+            return np.asarray(fn(self.params, dec["caches"], dec["pos"],
+                                 first))
+        lens = self._place(jnp.asarray(row_lens, jnp.int32), self._row_ns)
+        return np.asarray(fn(self.params, dec["caches"], dec["pos"], first,
+                             lens))
 
     def sample(self, logits, rng=None) -> jnp.ndarray:
         if self.scfg.temperature <= 0:
@@ -340,6 +361,22 @@ def _slate_impl(params, caches, pos, first, *, cfg, slate_len):
     last, _ = pick(logits, mask)
     return jnp.concatenate(
         [jnp.moveaxis(toks, 0, 1), last[:, None]], axis=1)
+
+
+def _slate_masked_impl(params, caches, pos, first, row_lens, *, cfg,
+                       slate_len):
+    """Per-request slate lengths on a fixed-shape pane: decode the pane
+    max, then mask each row's tail (slots >= row_lens[row]) to -1. The
+    mask is a compare against an iota — no batch-dependent scatter, so
+    the partitioned program stays collective-free like the uniform one.
+    Greedy decode picks each item from state that only depends on the
+    items already chosen, so a row's first k items are exactly the
+    k-slate it would have been served alone."""
+    slate = _slate_impl(params, caches, pos, first, cfg=cfg,
+                        slate_len=slate_len)
+    keep = (jnp.arange(slate_len, dtype=jnp.int32)[None, :]
+            < row_lens[:, None])
+    return jnp.where(keep, slate, -1)
 
 
 # ----------------------------------------------------------------------

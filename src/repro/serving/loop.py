@@ -1,194 +1,46 @@
-"""End-to-end injection serving loop — the system the paper describes.
+"""Legacy wave-oriented serving API — a thin wrapper over the Gateway.
 
-This connects the pieces the repo already has into one request path
-(PAPER.md §III-B, ROADMAP north star):
+.. deprecated::
+    ``InjectionServer.serve(users, now)`` predates the request-level
+    serving API. The system's one serving facade is now the
+    :class:`~repro.serving.scheduler.Gateway` (typed
+    ``Request``/``Response`` lifecycle, micro-batching scheduler,
+    per-request policy/slate_len/deadline, unified event ingestion and
+    telemetry — see ``serving/api.py`` and ``serving/scheduler.py``,
+    and docs/serving.md for the migration guide). A wave is just a
+    degenerate request trace — every arrival at the same instant, all on
+    the gateway defaults:
 
-    features:  FeatureInjector (BatchFeatureStore + RealtimeFeatureService)
-    tokens:    items_to_tokens (item i -> token i+1, pad -> 0)
-    model:     ServingEngine.prefill / inject / finalize / decode
+        serve(users, now)  ==  submit_many([Request(u, now) for u in users])
+                               + flush(now)
 
-The cost structure is the paper's whole point: the *batch* history of a
-user changes only when the daily snapshot rolls, so its model state
-(prefill KV/SSM cache) is cacheable across requests. ``InjectionServer``
-keeps a **prefill-state cache** keyed by ``(user, snapshot generation)``;
-a request for a cached user pays only
+    which is literally how this wrapper is implemented, so it serves
+    **bitwise-identical** slates/scores to the pre-Gateway wave loop
+    (same pane formation, same cache-aware hit/miss partitioning, same
+    engine call sequence) — verified by tests/test_serving_api.py.
+    ``serve()`` emits a DeprecationWarning; new code should construct a
+    Gateway directly.
 
-    inject(fresh suffix) + decode          (O(Δ) per request)
-
-instead of
-
-    prefill(full history) + decode         (O(history) per request)
-
-The **cache-key invariant**: an entry keyed ``(user, generation)`` is a
-pure function of (that user's event log at the generation's snapshot
-cutoff, the model parameters). Neither request time nor fresh events
-enter the key — fresh events ride in through ``inject`` per request and
-are never written back into the cached state. That is what makes a hit
-safe to serve at any ``now`` within the generation, and it is why the
-key MUST carry the generation: the same user's batch history differs
-across snapshot cutoffs, so a ``(user,)``-keyed cache would silently
-serve yesterday's state after the daily job rolls.
-
-Cache mechanics:
-  * admission on miss — the miss rows of a pane are prefilled in one
-    fixed-shape batch and inserted per user;
-  * LRU eviction over a configurable entry budget and an optional
-    per-shard byte budget (each entry is one user's sequence-form prefill
-    state: O(prefill_len) KV per attention layer, O(1) state per SSM
-    layer; on a data-parallel mesh the pane-resident working set divides
-    across shards, so accounting is per shard — see PrefillStateCache);
-  * generation invalidation — when ``maybe_run_due_snapshots`` rolls the
-    snapshot generation, every cached state was built from now-stale batch
-    features; the key includes the generation (stale entries can never be
-    *served*), and the whole old generation is additionally purged
-    **eagerly** rather than waiting for LRU pressure: stale entries can
-    never hit again (their key embeds a dead generation), so every byte
-    they hold is pure waste — and under an entry-count budget they would
-    otherwise evict *live* entries while they aged out.
-
-Requests are grouped into fixed-shape panes of ``max_batch`` rows (the
-engine jits one shape per entry point); short panes are padded with a
-repeat of row 0 and the padding rows are discarded from the outputs.
-Because every pane is padded to exactly ``max_batch`` — and a sharded
-engine validates ``max_batch`` against the mesh's data-axis size at
-construction — uneven hit/miss splits can never produce a pane shape
-that recompiles or shards unevenly: the pane shape is a constant of the
-server's lifetime, on one device or sixty-four.
-
-The ``policy`` mirrors ``InjectionConfig``: "batch" (stale features,
-control arm), "inject" (cached state + fresh-suffix injection — the
-paper), "fresh" (features recomputed at the request cutoff; inherently
-uncacheable, the oracle upper bound). ``use_cache=False`` degrades
-"inject" to full-prefill-per-request — the baseline the serving benchmark
-compares against.
+The serving design itself — the prefill-state cache keyed
+``(user, snapshot generation)``, the cache-key invariant, eager
+generation purge, cache-aware pane formation, host-resident LRU entries
+— lives with the scheduler; see the module docstring of
+``serving/scheduler.py`` and docs/serving.md.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Dict, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.injection import FeatureInjector
-from repro.core.pipeline import items_to_tokens
+from repro.serving.api import Request
 from repro.serving.engine import ServingEngine
-
-
-# ----------------------------------------------------------------------
-# Prefill-state cache
-# ----------------------------------------------------------------------
-
-class PrefillStateCache:
-    """LRU cache: (user, generation) -> one user's prefill state.
-
-    An entry holds the sequence-form engine state sliced to one row
-    (cache leaves keep their leading layer-repeat axis; batch axis 1 has
-    extent 1) plus the prefill's last-position logits — the next-item
-    scores when the request carries no fresh suffix.
-
-    Eviction runs over two budgets: an entry count (``budget``) and an
-    optional **per-shard byte** budget (``byte_budget``). Byte accounting
-    is per data-parallel shard because that is the unit that must fit in
-    one device's HBM: a single-row entry is replicated host-side, but the
-    moment rows are assembled into a pane and shipped to a ``dp``-way
-    mesh, each shard holds ``1/dp`` of the pane — so an entry's
-    accountable size is ``ceil(nbytes / shards)``. ``shards`` is the
-    engine's data-axis size (1 on a single device, making per-shard ==
-    total).
-    """
-
-    def __init__(self, budget: int, byte_budget: Optional[int] = None,
-                 shards: int = 1):
-        if budget < 1:
-            raise ValueError(f"cache budget must be >= 1, got {budget}")
-        if byte_budget is not None and byte_budget < 1:
-            raise ValueError(
-                f"byte budget must be >= 1 when set, got {byte_budget}")
-        self.budget = budget
-        self.byte_budget = byte_budget
-        self.shards = max(int(shards), 1)
-        # value = (entry, per-shard bytes); bytes memoized at put() time so
-        # eviction/statistics never re-walk the state pytree
-        self._entries: "OrderedDict[Tuple[int, int], Tuple[Dict[str, Any], int]]" = \
-            OrderedDict()
-        self.bytes_per_shard = 0      # current resident total, per shard
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.invalidations = 0
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def __contains__(self, key: Tuple[int, int]) -> bool:
-        return key in self._entries
-
-    @staticmethod
-    def entry_nbytes(entry: Dict[str, Any]) -> int:
-        """Logical bytes of one cached state (all array leaves)."""
-        return sum(x.nbytes for x in jax.tree.leaves(entry)
-                   if hasattr(x, "nbytes"))
-
-    def get(self, user: int, gen: int) -> Optional[Dict[str, Any]]:
-        rec = self._entries.get((user, gen))
-        if rec is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end((user, gen))
-        self.hits += 1
-        return rec[0]
-
-    def _pop_lru(self) -> None:
-        _, (_, nb) = self._entries.popitem(last=False)
-        self.bytes_per_shard -= nb
-        self.evictions += 1
-
-    def put(self, user: int, gen: int, entry: Dict[str, Any]) -> None:
-        nb = -(-self.entry_nbytes(entry) // self.shards)  # ceil div
-        old = self._entries.get((user, gen))
-        if old is not None:
-            self.bytes_per_shard -= old[1]
-        self._entries[(user, gen)] = (entry, nb)
-        self._entries.move_to_end((user, gen))
-        self.bytes_per_shard += nb
-        while len(self._entries) > self.budget:
-            self._pop_lru()
-        while (self.byte_budget is not None and len(self._entries) > 1
-               and self.bytes_per_shard > self.byte_budget):
-            # len > 1: the just-admitted entry always stays — a byte budget
-            # smaller than one entry must still serve the current pane
-            self._pop_lru()
-
-    def invalidate_except(self, gen: int) -> int:
-        """Purge every entry from a generation other than ``gen``."""
-        stale = [k for k in self._entries if k[1] != gen]
-        for k in stale:
-            self.bytes_per_shard -= self._entries.pop(k)[1]
-        self.invalidations += len(stale)
-        return len(stale)
-
-    def stats(self) -> Dict[str, int]:
-        return {"entries": len(self._entries), "hits": self.hits,
-                "misses": self.misses, "evictions": self.evictions,
-                "invalidations": self.invalidations,
-                "bytes_per_shard": self.bytes_per_shard,
-                "shards": self.shards}
-
-
-# ----------------------------------------------------------------------
-# Server
-# ----------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class ServerConfig:
-    slate_len: int = 4            # items decoded per request
-    cache_entries: int = 4096     # LRU budget (user-generation states)
-    cache_bytes: Optional[int] = None  # per-shard byte budget (None = off)
-    use_cache: bool = True        # False -> full prefill per request
-    run_batch_jobs: bool = True   # roll due snapshots inside serve()
+from repro.serving.scheduler import (  # noqa: F401  (re-exported: the
+    Gateway, PrefillStateCache, ServerConfig)        # pre-Gateway public
+#                                                      surface lived here
 
 
 @dataclasses.dataclass
@@ -200,270 +52,95 @@ class ServeResult:
 
 
 class InjectionServer:
-    """The full request path, one call: ``serve(users, now)``.
+    """Back-compat wave API: the full request path, one call —
+    ``serve(users, now)``. Deprecated; thin shim over :class:`Gateway`.
 
-    Works identically on a single device and on a data-parallel mesh: the
-    engine owns all placement (a mesh-constructed ``ServingEngine`` jits
-    with NamedSharding in/out specs), the server only ever builds
-    fixed-shape ``max_batch`` panes — which the engine has already
-    validated against the mesh's data-axis size — so the loop code has no
-    sharding branches at all.
+    Everything stateful (cache, counters, clock) belongs to the wrapped
+    gateway, exposed read-through so existing callers and tests keep
+    working; ``warm``/``stats`` delegate directly.
     """
 
     def __init__(self, engine: ServingEngine, injector: FeatureInjector,
                  cfg: ServerConfig = ServerConfig()):
-        self.engine = engine
-        self.injector = injector
-        self.cfg = cfg
-        self.cache = PrefillStateCache(cfg.cache_entries,
-                                       byte_budget=cfg.cache_bytes,
-                                       shards=engine.data_shards)
-        self._gen = None  # generation the cache was last validated against
-        self.requests = 0
-        self.panes = 0
-        self.prefill_calls = 0
-        self.inject_calls = 0
-        self.decode_steps = 0
+        self.gateway = Gateway(engine, injector, cfg)
+
+    # -- read-through compatibility surface ----------------------------
+    @property
+    def engine(self) -> ServingEngine:
+        return self.gateway.engine
+
+    @property
+    def injector(self) -> FeatureInjector:
+        return self.gateway.injector
+
+    @property
+    def cfg(self) -> ServerConfig:
+        return self.gateway.cfg
+
+    @property
+    def cache(self) -> PrefillStateCache:
+        return self.gateway.cache
+
+    @property
+    def requests(self) -> int:
+        return self.gateway.requests
+
+    @property
+    def panes(self) -> int:
+        return self.gateway.panes
+
+    @property
+    def prefill_calls(self) -> int:
+        return self.gateway.prefill_calls
+
+    @property
+    def inject_calls(self) -> int:
+        return self.gateway.inject_calls
+
+    @property
+    def decode_steps(self) -> int:
+        return self.gateway.decode_steps
 
     # ------------------------------------------------------------------
-    def _sync_generation(self, now: int) -> int:
-        """Roll due snapshots and purge cache entries the roll staled."""
-        if self.cfg.run_batch_jobs:
-            self.injector.batch.maybe_run_due_snapshots(now)
-        gen = self.injector.generation(now)
-        if gen != self._gen:
-            self.cache.invalidate_except(gen)
-            self._gen = gen
-        return gen
-
     def warm(self, users: Sequence[int], now: int) -> int:
-        """Cache-warming pass: admit ``users``' batch-history prefill
-        states without serving — the post-snapshot precompute a daily job
-        runs so live traffic starts on the inject-only path. Returns the
-        number of states prefilled. No-op when caching is off or the
-        policy is uncacheable. Clamped to the first ``cache_entries``
-        users (pass highest-priority users first), and stops early once
-        the byte budget is full — warming past either budget would
-        prefill states that LRU-evict before they serve."""
-        users = np.asarray(users, np.int64).ravel()[:self.cache.budget]
-        if not self.cfg.use_cache or self.injector.cfg.policy == "fresh":
-            return 0
-        gen = self._sync_generation(now)
-        before = self.cache.misses
-        ev0 = self.cache.evictions
-        b = self.engine.scfg.max_batch
-        for lo in range(0, len(users), b):
-            self._lookup_or_admit(users[lo:lo + b], now, gen)
-            if self.cache.evictions > ev0:
-                break  # a budget (the byte budget — the entry clamp above
-                #        already bounds entries) is full: further warming
-                #        would only evict states we just paid to prefill
-        return self.cache.misses - before
+        """Daily-job cache precompute; see :meth:`Gateway.warm`."""
+        return self.gateway.warm(users, now)
 
     def serve(self, users: Sequence[int], now: int) -> ServeResult:
+        """Serve one pre-grouped wave. Deprecated: submit Requests to
+        the Gateway instead (this shim is exactly ``submit_many`` +
+        ``flush`` on default-policy requests)."""
+        warnings.warn(
+            "InjectionServer.serve(users, now) is deprecated; use "
+            "Gateway.submit/submit_many with typed Requests "
+            "(repro.serving.scheduler.Gateway) — see docs/serving.md "
+            "for the migration guide", DeprecationWarning, stacklevel=2)
+        gw = self.gateway
+        # Legacy semantics: the wave is served AT the call's ``now``,
+        # even if an earlier call used a later time — the pre-Gateway
+        # loop read features/generation at whatever ``now`` it was
+        # handed. The request API's clock is deliberately monotonic, so
+        # the shim rewinds it explicitly rather than inheriting
+        # "serve at max(now, previous now)" behavior the legacy loop
+        # never had.
+        gw._clock = int(now)
         users = np.asarray(users, np.int64).ravel()
-        gen = self._sync_generation(now)
-        b = self.engine.scfg.max_batch
-
-        # Cache-aware batching: group the wave into pure-hit panes (pay
-        # inject-only) and miss panes (pay one admission prefill each)
-        # instead of slicing in arrival order — one cold row in a pane of
-        # hits would otherwise drag the whole pane onto the prefill path.
-        # Rows are independent, so regrouping cannot change any result;
-        # outputs are scattered back to arrival order.
-        cacheable = self.cfg.use_cache and self.injector.cfg.policy != "fresh"
-        if cacheable and len(users) > b:
-            is_miss = np.array([(int(u), gen) not in self.cache
-                                for u in users])
-            order = np.argsort(is_miss, kind="stable")  # hits first
-        else:
-            order = np.arange(len(users))
-
-        scores = np.zeros((len(users), self.engine.cfg.vocab_padded),
-                          np.float32)
-        slates = np.zeros((len(users), self.cfg.slate_len), np.int32)
-        hits0, miss0 = self.cache.hits, self.cache.misses
-        for lo in range(0, len(users), b):  # pane-split: never drop rows
-            idx = order[lo:lo + b]
-            s, sl = self._serve_pane(users[idx], now, gen)
-            scores[idx] = s[:len(idx)]
-            slates[idx] = sl[:len(idx)]
-            self.panes += 1
-        self.requests += len(users)
+        if len(users) == 0:
+            gw.tick(now)  # the legacy loop still synced the snapshot
+            return ServeResult(
+                scores=np.zeros((0, gw.engine.cfg.vocab_padded), np.float32),
+                slate=np.zeros((0, gw.cfg.slate_len), np.int32),
+                cache_hits=0, cache_misses=0)
+        hits0, miss0 = gw.cache.hits, gw.cache.misses
+        tickets = gw.submit_many(
+            [Request(user=int(u), now=int(now)) for u in users])
+        gw.flush(now)
         return ServeResult(
-            scores=scores, slate=slates,
-            cache_hits=self.cache.hits - hits0,
-            cache_misses=self.cache.misses - miss0)
-
-    # ------------------------------------------------------------------
-    # Feature -> token assembly
-    # ------------------------------------------------------------------
-
-    def _history_tokens(self, pane: np.ndarray, now: int) -> List[List[int]]:
-        """Per-row batch-history token lists under the injector's policy."""
-        inj = self.injector
-        if inj.cfg.policy == "fresh":
-            items, _, valid = inj.batch.lookup_at_cutoff(pane, now)
-        else:  # "batch" and "inject" share the snapshot prefix
-            items, _, valid = inj.batch.lookup(pane, now)
-        toks = items_to_tokens(items, valid)
-        return [toks[r][valid[r] > 0].tolist() for r in range(len(pane))]
-
-    def _suffix_tokens(self, pane: np.ndarray, now: int) -> List[List[int]]:
-        if self.injector.cfg.policy != "inject":
-            return [[] for _ in range(len(pane))]
-        suffixes = self.injector.fresh_suffix(pane, now)
-        # cap at inject_len newest events so the cached and full-prefill
-        # paths see identical token streams (pad_tokens would otherwise
-        # truncate them at different lengths)
-        cap = self.engine.scfg.inject_len
-        return [items_to_tokens(
-            np.asarray([item for item, _ in evs[-cap:]], np.int64),
-            np.ones(len(evs[-cap:]), np.int64)).tolist() for evs in suffixes]
-
-    # ------------------------------------------------------------------
-    # Pane execution
-    # ------------------------------------------------------------------
-
-    def _serve_pane(self, pane: np.ndarray, now: int, gen: int,
-                    ) -> Tuple[np.ndarray, np.ndarray]:
-        eng = self.engine
-        suffix = self._suffix_tokens(pane, now)
-        cacheable = self.cfg.use_cache and self.injector.cfg.policy != "fresh"
-        if not cacheable:
-            hists = self._history_tokens(pane, now)
-            # truncate history to prefill_len BEFORE appending the suffix —
-            # exactly what the cached path's prefill pane sees — so both
-            # paths run identical token streams even when the feature
-            # history is longer than prefill_len
-            p = eng.scfg.prefill_len
-            streams = [h[-p:] + s for h, s in zip(hists, suffix)]
-            toks, valid = eng.pad_tokens(streams, p + eng.scfg.inject_len)
-            state = eng.prefill(toks, valid)
-            self.prefill_calls += 1
-            first = state["logits"][:, -1]
-            return self._decode_slate(state, first)
-
-        entries = self._lookup_or_admit(pane, now, gen)
-        state = _cat_rows(entries, eng.scfg.max_batch)
-        last = np.stack([e["last_logits"] for e in _pad_list(
-            entries, eng.scfg.max_batch)])
-        if any(suffix):
-            stoks, svalid = eng.pad_tokens(suffix, eng.scfg.inject_len,
-                                           align="left")
-            # the cached pre-inject scores ride along as the fallback, so
-            # per-row "last fresh event vs empty suffix" selection happens
-            # inside the inject jit — no logits ever sync to pick them
-            state = eng.inject(state, stoks, svalid, fallback_logits=last)
-            self.inject_calls += 1
-            first = state["first_logits"]
-        else:
-            first = last
-        return self._decode_slate(state, first)
-
-    def _lookup_or_admit(self, pane: np.ndarray, now: int, gen: int,
-                         ) -> List[Dict[str, Any]]:
-        """Return per-row cache entries, prefilling the misses in one
-        fixed-shape batch (one prefill per pane worst case)."""
-        eng = self.engine
-        entries: Dict[int, Dict[str, Any]] = {}
-        miss_users: List[int] = []
-        for u in pane.tolist():
-            # probe once per ROW (not per unique user) so hit/miss counters
-            # stay in request units even when a pane repeats a user; the
-            # admission list itself is deduplicated below
-            e = self.cache.get(u, gen)
-            if e is None:
-                if u not in miss_users:
-                    miss_users.append(u)
-            else:
-                entries[u] = e
-        if miss_users:
-            hists = self._history_tokens(np.asarray(miss_users), now)
-            toks, valid = eng.pad_tokens(hists, eng.scfg.prefill_len)
-            state = eng.prefill(toks, valid)
-            self.prefill_calls += 1
-            host = _host_state(state)  # one device→host sync per leaf
-            for j, u in enumerate(miss_users):
-                entry = _slice_row(host, j)
-                self.cache.put(u, gen, entry)
-                entries[u] = entry
-        return [entries[u] for u in pane.tolist()]
-
-    def _decode_slate(self, state: Dict[str, Any], first_logits,
-                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """finalize -> greedy slate of ``slate_len`` *distinct* items.
-
-        The whole slate (mask chosen → argmax → decode, repeated) runs as
-        one jit call in the engine — the per-token host loop this replaces
-        was the single largest serve-path cost (eager masking + one
-        device sync per decoded item)."""
-        eng = self.engine
-        slate = eng.decode_slate(state, first_logits, self.cfg.slate_len)
-        self.decode_steps += self.cfg.slate_len - 1
-        return np.asarray(first_logits, np.float32), slate
+            scores=np.stack([t.response.scores for t in tickets]),
+            slate=np.stack([t.response.slate for t in tickets]),
+            cache_hits=gw.cache.hits - hits0,
+            cache_misses=gw.cache.misses - miss0)
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        return {"requests": self.requests, "panes": self.panes,
-                "prefill_calls": self.prefill_calls,
-                "inject_calls": self.inject_calls,
-                "decode_steps": self.decode_steps,
-                "cache": self.cache.stats()}
-
-
-# ----------------------------------------------------------------------
-# Per-row state plumbing (batch axis of every cache leaf is axis 1;
-# verified for attention K/V, SSM conv/state and the Jamba hybrid)
-#
-# Entries are HOST-resident numpy: slicing/assembling panes row-by-row in
-# eager jax ops was the serve path's dominant cost (hundreds of tiny
-# dispatches per pane), while numpy slices/concats are C-speed memcpy.
-# The assembled pane crosses to the device (mesh-sharded, when the engine
-# has one) exactly once, at the next jit boundary — the engine device_puts
-# every operand to its serving layout. On a CPU host this is free (it is
-# all host memory); on TPU it trades HBM residency for PCIe transfer per
-# admission+hit, and the device-resident follow-up is a paged state pool
-# (slot-indexed gather instead of host concat) — see docs/serving.md.
-# ----------------------------------------------------------------------
-
-def _host_state(state: Dict[str, Any]) -> Dict[str, Any]:
-    """Pull a batched sequence-form prefill state to host, whole-pane at a
-    time (one device→host sync per cache leaf, not per row)."""
-    return {
-        "caches": jax.tree.map(np.asarray, state["caches"]),
-        "valid": np.asarray(state["valid"]),
-        "next_pos": np.asarray(state["next_pos"]),
-        "last_logits": np.asarray(state["logits"][:, -1]),
-    }
-
-
-def _slice_row(host: Dict[str, Any], row: int) -> Dict[str, Any]:
-    """One row of a host-form pane state, copied so the entry doesn't pin
-    the whole pane's buffers in the LRU."""
-    return {
-        "caches": jax.tree.map(lambda x: x[:, row:row + 1].copy(),
-                               host["caches"]),
-        "valid": host["valid"][row:row + 1].copy(),
-        "next_pos": host["next_pos"][row:row + 1].copy(),
-        "last_logits": host["last_logits"][row].copy(),
-    }
-
-
-def _pad_list(entries: List[Dict[str, Any]], b: int) -> List[Dict[str, Any]]:
-    if not entries:
-        raise ValueError("empty pane")
-    return entries + [entries[0]] * (b - len(entries))
-
-
-def _cat_rows(entries: List[Dict[str, Any]], b: int) -> Dict[str, Any]:
-    """Assemble per-user entries into one max_batch engine state (short
-    panes padded by repeating row 0; padding rows are discarded later)."""
-    rows = _pad_list(entries, b)
-    return {
-        "caches": jax.tree.map(lambda *xs: np.concatenate(xs, axis=1),
-                               *[e["caches"] for e in rows]),
-        "valid": np.concatenate([e["valid"] for e in rows], axis=0),
-        "next_pos": np.concatenate([e["next_pos"] for e in rows], axis=0),
-        "logits": None,  # per-row slices don't keep full prefill logits
-    }
+        return self.gateway.stats()

@@ -1,0 +1,747 @@
+"""Request-level serving: the Gateway facade + micro-batching scheduler.
+
+The engine jits one fixed ``max_batch`` pane shape per entry point, but
+real traffic is per-request: arrivals trickle in, carry their own A/B
+arm (policy) and slate length, and are not pre-grouped into waves. The
+:class:`Gateway` is the bridge — the *one* serving facade:
+
+    ticket = gw.submit(Request(user=7, now=now))    # enqueue an arrival
+    gw.observe(Event(user=7, item=42, ts=now))      # feedback ingestion
+    gw.tick(now + 60)                               # clock: snapshots,
+                                                    # deadline flushes
+    ticket.response.slate                           # filled at flush
+
+**Micro-batching.** Queued requests coalesce into the engine's
+fixed-shape ``max_batch`` panes. A pane flushes when it is *full*, or
+when a queued request's ``deadline`` is reached by the gateway clock
+(the pane is padded and served short — latency beats utilization once a
+deadline fires), or on an explicit ``flush()``. When more than one
+pane's worth of requests is queued at drain time, the scheduler reuses
+the cache-aware partitioning the wave path proved out: rows whose
+``(user, generation)`` prefill state is cached are grouped into
+pure-hit panes ahead of miss rows (stable order otherwise), so one cold
+row cannot drag a pane of hits onto the prefill path. Rows are
+independent, so regrouping never changes any row's result.
+
+**Mixed-policy panes.** Per-request ``policy`` resolves at
+feature-assembly time, so control ("batch"), treatment ("inject") and
+oracle ("fresh") rows coexist in one pane: batch/inject rows share the
+snapshot history (and therefore the same cached prefill state — a batch
+row is just an inject row with an empty suffix), while fresh rows are
+prefilled at the request cutoff as *ephemeral* admissions (never
+cached: their history depends on ``now``, violating the cache-key
+invariant). This is what makes the paper's A/B split expressible on one
+serving fleet: arms are request labels, not server deployments.
+
+**Telemetry.** Every response carries a :class:`RequestTelemetry`
+(pane id, queue delay, cache hit, prefill-vs-inject path, generation);
+``Gateway.stats()`` aggregates them (path counts, queue-delay
+percentiles over a sliding window) on top of the engine/cache counters.
+
+The legacy wave API (``InjectionServer.serve(users, now)`` in
+serving/loop.py) is a thin wrapper over this facade and serves
+bitwise-identical results: a wave is ``submit_many`` + ``flush`` with
+every request on the gateway defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict, deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.injection import FeatureInjector
+from repro.core.pipeline import items_to_tokens
+from repro.serving.api import (POLICIES, Request, RequestTelemetry,
+                               Response, Ticket, as_event)
+from repro.serving.engine import ServingEngine
+
+
+# ----------------------------------------------------------------------
+# Prefill-state cache
+# ----------------------------------------------------------------------
+
+class PrefillStateCache:
+    """LRU cache: (user, generation) -> one user's prefill state.
+
+    An entry holds the sequence-form engine state sliced to one row
+    (cache leaves keep their leading layer-repeat axis; batch axis 1 has
+    extent 1) plus the prefill's last-position logits — the next-item
+    scores when the request carries no fresh suffix.
+
+    Eviction runs over two budgets: an entry count (``budget``) and an
+    optional **per-shard byte** budget (``byte_budget``). Byte accounting
+    is per data-parallel shard because that is the unit that must fit in
+    one device's HBM: a single-row entry is replicated host-side, but the
+    moment rows are assembled into a pane and shipped to a ``dp``-way
+    mesh, each shard holds ``1/dp`` of the pane — so an entry's
+    accountable size is ``ceil(nbytes / shards)``. ``shards`` is the
+    engine's data-axis size (1 on a single device, making per-shard ==
+    total).
+    """
+
+    def __init__(self, budget: int, byte_budget: Optional[int] = None,
+                 shards: int = 1):
+        if budget < 1:
+            raise ValueError(f"cache budget must be >= 1, got {budget}")
+        if byte_budget is not None and byte_budget < 1:
+            raise ValueError(
+                f"byte budget must be >= 1 when set, got {byte_budget}")
+        self.budget = budget
+        self.byte_budget = byte_budget
+        self.shards = max(int(shards), 1)
+        # value = (entry, per-shard bytes); bytes memoized at put() time so
+        # eviction/statistics never re-walk the state pytree
+        self._entries: "OrderedDict[Tuple[int, int], Tuple[Dict[str, Any], int]]" = \
+            OrderedDict()
+        self.bytes_per_shard = 0      # current resident total, per shard
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.invalidations = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple[int, int]) -> bool:
+        return key in self._entries
+
+    @staticmethod
+    def entry_nbytes(entry: Dict[str, Any]) -> int:
+        """Logical bytes of one cached state (all array leaves)."""
+        return sum(x.nbytes for x in jax.tree.leaves(entry)
+                   if hasattr(x, "nbytes"))
+
+    def get(self, user: int, gen: int) -> Optional[Dict[str, Any]]:
+        rec = self._entries.get((user, gen))
+        if rec is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end((user, gen))
+        self.hits += 1
+        return rec[0]
+
+    def _pop_lru(self) -> None:
+        _, (_, nb) = self._entries.popitem(last=False)
+        self.bytes_per_shard -= nb
+        self.evictions += 1
+
+    def put(self, user: int, gen: int, entry: Dict[str, Any]) -> None:
+        nb = -(-self.entry_nbytes(entry) // self.shards)  # ceil div
+        old = self._entries.get((user, gen))
+        if old is not None:
+            self.bytes_per_shard -= old[1]
+        self._entries[(user, gen)] = (entry, nb)
+        self._entries.move_to_end((user, gen))
+        self.bytes_per_shard += nb
+        while len(self._entries) > self.budget:
+            self._pop_lru()
+        while (self.byte_budget is not None and len(self._entries) > 1
+               and self.bytes_per_shard > self.byte_budget):
+            # len > 1: the just-admitted entry always stays — a byte budget
+            # smaller than one entry must still serve the current pane
+            self._pop_lru()
+
+    def invalidate_except(self, gen: int) -> int:
+        """Purge every entry from a generation other than ``gen``."""
+        stale = [k for k in self._entries if k[1] != gen]
+        for k in stale:
+            self.bytes_per_shard -= self._entries.pop(k)[1]
+        self.invalidations += len(stale)
+        return len(stale)
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "invalidations": self.invalidations,
+                "bytes_per_shard": self.bytes_per_shard,
+                "shards": self.shards}
+
+
+# ----------------------------------------------------------------------
+# Config
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Gateway/serving configuration, validated at construction.
+
+    ``slate_len`` is the *default* items-per-request (a Request may
+    override it per row, up to the engine's vocabulary — checked at
+    Gateway construction / submit, where the engine is known).
+    ``cache_entries`` is the prefill-state LRU budget; ``warm()`` clamps
+    its user list to it (warming past the budget would prefill states
+    that evict before they ever serve), so a budget of 1 is legal but
+    warms exactly one user.
+    """
+    slate_len: int = 4            # items decoded per request (default)
+    cache_entries: int = 4096     # LRU budget (user-generation states)
+    cache_bytes: Optional[int] = None  # per-shard byte budget (None = off)
+    use_cache: bool = True        # False -> full prefill per request
+    run_batch_jobs: bool = True   # roll due snapshots on the clock
+
+    def __post_init__(self):
+        if self.slate_len < 1:
+            raise ValueError(
+                f"slate_len must be >= 1, got {self.slate_len}")
+        if self.cache_entries < 1:
+            raise ValueError(
+                f"cache_entries must be >= 1, got {self.cache_entries} "
+                f"(warm() clamps its user list to this budget, so even a "
+                f"cacheless deployment needs a >= 1 placeholder — use "
+                f"use_cache=False to disable caching)")
+        if self.cache_bytes is not None and self.cache_bytes < 1:
+            raise ValueError(
+                f"cache_bytes must be >= 1 when set (None disables the "
+                f"byte budget), got {self.cache_bytes}")
+
+
+# ----------------------------------------------------------------------
+# The Gateway
+# ----------------------------------------------------------------------
+
+class Gateway:
+    """The unified serving facade: request submission, micro-batching,
+    event ingestion and clock/snapshot management in one object.
+
+    Works identically on a single device and on a data-parallel mesh:
+    the engine owns all placement, the gateway only ever builds
+    fixed-shape ``max_batch`` panes — which the engine has already
+    validated against the mesh's data-axis size — so the scheduling code
+    has no sharding branches at all.
+    """
+
+    def __init__(self, engine: ServingEngine, injector: FeatureInjector,
+                 cfg: ServerConfig = ServerConfig()):
+        if injector.cfg.policy not in POLICIES:
+            raise ValueError(
+                f"unknown default policy {injector.cfg.policy!r} on the "
+                f"injector; the gateway serves {POLICIES}")
+        if cfg.slate_len > engine.cfg.vocab_size:
+            raise ValueError(
+                f"slate_len={cfg.slate_len} exceeds the engine's item "
+                f"vocabulary ({engine.cfg.vocab_size}); a slate decodes "
+                f"distinct items, so it cannot be longer than the catalog")
+        self.engine = engine
+        self.injector = injector
+        self.cfg = cfg
+        self.cache = PrefillStateCache(cfg.cache_entries,
+                                       byte_budget=cfg.cache_bytes,
+                                       shards=engine.data_shards)
+        self._gen = None  # generation the cache was last validated against
+        self._clock: Optional[int] = None
+        self._queue: List[Ticket] = []
+        self._next_id = 0
+        # counters / telemetry
+        self.requests = 0
+        self.panes = 0
+        self.prefill_calls = 0
+        self.inject_calls = 0
+        self.decode_steps = 0
+        self._path_counts = {"prefill": 0, "inject": 0, "cached": 0}
+        self._queue_delays: deque = deque(maxlen=4096)
+        self._deadline_flushes = 0
+
+    # ------------------------------------------------------------------
+    # Clock / snapshot plumbing
+    # ------------------------------------------------------------------
+
+    @property
+    def clock(self) -> Optional[int]:
+        """The gateway's current time: the max ``now`` seen across
+        submit/tick/flush. Never moves backwards."""
+        return self._clock
+
+    @property
+    def pending(self) -> int:
+        """Requests queued but not yet served."""
+        return len(self._queue)
+
+    def _advance(self, now: Optional[int]) -> None:
+        if now is not None and (self._clock is None or now > self._clock):
+            self._clock = int(now)
+
+    def _sync_generation(self, now: int) -> int:
+        """Roll due snapshots and purge cache entries the roll staled."""
+        if self.cfg.run_batch_jobs:
+            self.injector.batch.maybe_run_due_snapshots(now)
+        gen = self.injector.generation(now)
+        if gen != self._gen:
+            self.cache.invalidate_except(gen)
+            self._gen = gen
+        return gen
+
+    # ------------------------------------------------------------------
+    # Ingestion (the other half of the facade)
+    # ------------------------------------------------------------------
+
+    def observe(self, ev) -> None:
+        """Ingest one feedback event into both feature stores (offline
+        log + realtime stream). Accepts an :class:`Event`, a
+        ``(user, item, ts)`` tuple, or any object with those attributes
+        — the same hook signature the platform exposes."""
+        ev = as_event(ev)
+        self.injector.batch.append(ev.user, ev.item, ev.ts)
+        if self.injector.realtime is not None:
+            self.injector.realtime.ingest(ev.user, ev.item, ev.ts)
+
+    def observe_many(self, users, items, tss) -> None:
+        """Columnar bulk ingest (parallel arrays) of feedback events."""
+        self.injector.batch.extend(users, items, tss)
+        if self.injector.realtime is not None:
+            self.injector.realtime.extend(users, items, tss)
+
+    def tick(self, now: int) -> List[Ticket]:
+        """Advance the gateway clock: roll due snapshots (purging the
+        cache on a generation change) and flush the queue if any pending
+        request's deadline has been reached. Returns tickets served by a
+        deadline flush (usually none)."""
+        self._advance(now)
+        self._sync_generation(self._clock)
+        if self._deadline_due():
+            self._deadline_flushes += 1
+            return self._drain(full_panes_only=False)
+        return []
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+
+    def _check_request(self, req: Request) -> None:
+        if req.slate_len is not None and \
+                req.slate_len > self.engine.cfg.vocab_size:
+            raise ValueError(
+                f"request slate_len={req.slate_len} exceeds the engine's "
+                f"item vocabulary ({self.engine.cfg.vocab_size})")
+        n_users = self.injector.batch.cfg.n_users
+        if req.user >= n_users:
+            # fail at the call site — inside pane execution this would be
+            # a numpy IndexError that takes the whole pane down with it
+            raise ValueError(
+                f"request user {req.user} is out of range for the "
+                f"feature plane (n_users={n_users})")
+
+    def submit(self, request: Request) -> Ticket:
+        """Enqueue one arrival. Flushes immediately when the queue
+        reaches a full ``max_batch`` pane, or when the arrival's clock
+        reaches a pending deadline; otherwise the request waits for
+        pane-full / deadline / ``tick`` / ``flush``."""
+        self._check_request(request)
+        t = Ticket(request, self._next_id, time.perf_counter())
+        self._next_id += 1
+        self._queue.append(t)
+        self._advance(request.now)
+        self._maybe_flush()
+        return t
+
+    def submit_many(self, requests: Sequence[Request]) -> List[Ticket]:
+        """Enqueue a batch of arrivals that are known together (a wave).
+
+        Unlike per-request ``submit``, the whole batch lands in the
+        queue before any pane forms, so the cache-aware partitioning
+        sees all of it at once — this is exactly the legacy wave
+        semantics, and full panes are flushed eagerly; a short remainder
+        stays queued for deadline/flush."""
+        for req in requests:
+            # validate the WHOLE batch before enqueuing any of it: a bad
+            # request mid-batch must not leave earlier rows queued with
+            # their ticket handles lost to the exception
+            self._check_request(req)
+        tickets = []
+        for req in requests:
+            t = Ticket(req, self._next_id, time.perf_counter())
+            self._next_id += 1
+            self._queue.append(t)
+            self._advance(req.now)
+            tickets.append(t)
+        self._maybe_flush()
+        return tickets
+
+    def flush(self, now: Optional[int] = None) -> List[Ticket]:
+        """Serve everything queued (the last pane padded if short)."""
+        self._advance(now)
+        return self._drain(full_panes_only=False)
+
+    def _deadline_due(self) -> bool:
+        if self._clock is None:
+            return False
+        return any(t.request.deadline is not None
+                   and t.request.deadline <= self._clock
+                   for t in self._queue)
+
+    def _maybe_flush(self) -> None:
+        """The one flush-trigger policy for every enqueue path: a due
+        deadline drains everything (padded short pane); otherwise a full
+        pane's worth of queued requests drains eagerly."""
+        if self._deadline_due():
+            self._deadline_flushes += 1
+            self._drain(full_panes_only=False)
+        elif len(self._queue) >= self.engine.scfg.max_batch:
+            self._drain(full_panes_only=True)
+
+    # ------------------------------------------------------------------
+    # The scheduler core
+    # ------------------------------------------------------------------
+
+    def _row_cacheable(self, policy: str) -> bool:
+        return self.cfg.use_cache and policy != "fresh"
+
+    def _policy_of(self, req: Request) -> str:
+        return req.policy or self.injector.cfg.policy
+
+    def _drain(self, full_panes_only: bool) -> List[Ticket]:
+        """Form and serve panes from the queue.
+
+        Cache-aware pane formation: when more than one pane is queued,
+        rows are stably partitioned hits-first over the *whole* queue
+        (uncacheable rows sort with the misses) before slicing into
+        fixed ``max_batch`` panes — one cold row in a pane of hits would
+        otherwise drag the whole pane onto the prefill path. Rows are
+        independent, so regrouping cannot change any result.
+        """
+        if not self._queue:
+            return []
+        now = self._clock
+        gen = self._sync_generation(now)
+        b = self.engine.scfg.max_batch
+        q = self._queue
+        if len(q) > b:
+            is_miss = np.array([
+                not self._row_cacheable(self._policy_of(t.request))
+                or (t.request.user, gen) not in self.cache
+                for t in q])
+            order = np.argsort(is_miss, kind="stable")  # hits first
+            q = [q[i] for i in order]
+        # adopt the (possibly reordered) queue up front and dequeue pane
+        # by pane AS each one serves: if a later pane raises, the served
+        # tickets are already out of the queue — a retried flush must
+        # never re-execute a pane whose responses the caller may hold
+        self._queue = q
+        served: List[Ticket] = []
+        while len(self._queue) >= b:
+            pane = self._queue[:b]
+            self._execute(pane, gen)
+            self._queue = self._queue[b:]
+            served.extend(pane)
+        if not full_panes_only and self._queue:
+            pane = list(self._queue)
+            self._execute(pane, gen)
+            self._queue = []
+            served.extend(pane)
+        return served
+
+    # ------------------------------------------------------------------
+    # Feature -> token assembly (per-row policy and clock)
+    # ------------------------------------------------------------------
+
+    def _histories(self, reqs: Sequence[Request], policies: Sequence[str],
+                   now: int) -> List[List[int]]:
+        """Per-row batch-history token lists, read at the pane's serve
+        clock ``now``. Features are **serve-time**, not arrival-time: a
+        pane is assembled once, when it executes, against the freshest
+        store state available — which is also what keeps a mixed pane at
+        one store lookup per history flavor ("batch"/"inject" share the
+        snapshot prefix; "fresh" reads at the serve cutoff) instead of
+        one per distinct arrival time."""
+        out: List[Optional[List[int]]] = [None] * len(reqs)
+        groups: "OrderedDict[bool, List[int]]" = OrderedDict()
+        for i, pol in enumerate(policies):
+            groups.setdefault(pol == "fresh", []).append(i)
+        for fresh, rows in groups.items():
+            users = np.asarray([reqs[i].user for i in rows], np.int64)
+            if fresh:
+                items, _, valid = self.injector.batch.lookup_at_cutoff(
+                    users, now)
+            else:
+                items, _, valid = self.injector.batch.lookup(users, now)
+            toks = items_to_tokens(items, valid)
+            for j, i in enumerate(rows):
+                out[i] = toks[j][valid[j] > 0].tolist()
+        return out  # type: ignore[return-value]
+
+    def _suffixes(self, reqs: Sequence[Request], policies: Sequence[str],
+                  now: int) -> List[List[int]]:
+        """Per-row fresh-suffix token lists at the serve clock; only
+        "inject" rows carry one (a single ``fresh_suffix`` call per
+        pane). Capped at inject_len newest events so the cached and
+        full-prefill paths see identical token streams (pad_tokens would
+        otherwise truncate them at different lengths)."""
+        out: List[List[int]] = [[] for _ in reqs]
+        if self.injector.realtime is None:
+            return out
+        rows = [i for i, pol in enumerate(policies) if pol == "inject"]
+        if not rows:
+            return out
+        cap = self.engine.scfg.inject_len
+        users = np.asarray([reqs[i].user for i in rows], np.int64)
+        sfx = self.injector.fresh_suffix(users, now)
+        for j, i in enumerate(rows):
+            evs = sfx[j][-cap:]
+            out[i] = items_to_tokens(
+                np.asarray([item for item, _ in evs], np.int64),
+                np.ones(len(evs), np.int64)).tolist()
+        return out
+
+    # ------------------------------------------------------------------
+    # Pane execution
+    # ------------------------------------------------------------------
+
+    def _execute(self, pane: List[Ticket], gen: int) -> None:
+        eng = self.engine
+        pane_id = self.panes
+        self.panes += 1
+        reqs = [t.request for t in pane]
+        now = int(self._clock)  # serve-time feature clock for the pane
+        policies = [self._policy_of(r) for r in reqs]
+        slate_lens = [r.slate_len or self.cfg.slate_len for r in reqs]
+        suffix = self._suffixes(reqs, policies, now)
+        cacheable = [self._row_cacheable(p) for p in policies]
+
+        if not any(cacheable):
+            # pure-uncacheable pane (policy "fresh", or caching off):
+            # one prefill of history[-prefill_len:] + suffix per row —
+            # truncating BEFORE the append keeps this path's token
+            # streams identical to the cached path's prefill pane even
+            # when the feature history is longer than prefill_len.
+            hists = self._histories(reqs, policies, now)
+            p = eng.scfg.prefill_len
+            streams = [h[-p:] + s for h, s in zip(hists, suffix)]
+            toks, valid = eng.pad_tokens(streams, p + eng.scfg.inject_len)
+            state = eng.prefill(toks, valid)
+            self.prefill_calls += 1
+            first = state["logits"][:, -1]
+            hit_flags = [False] * len(reqs)
+            paths = ["prefill"] * len(reqs)
+        else:
+            entries, hit_flags = self._lookup_or_admit(reqs, policies,
+                                                       cacheable, gen, now)
+            state = _cat_rows(entries, eng.scfg.max_batch)
+            last = np.stack([e["last_logits"] for e in _pad_list(
+                entries, eng.scfg.max_batch)])
+            if any(suffix):
+                stoks, svalid = eng.pad_tokens(suffix, eng.scfg.inject_len,
+                                               align="left")
+                # the cached pre-inject scores ride along as the
+                # fallback, so per-row "last fresh event vs empty
+                # suffix" selection happens inside the inject jit — no
+                # logits ever sync to pick them
+                state = eng.inject(state, stoks, svalid, fallback_logits=last)
+                self.inject_calls += 1
+                first = state["first_logits"]
+            else:
+                first = last
+            paths = ["prefill" if not h else ("inject" if s else "cached")
+                     for h, s in zip(hit_flags, suffix)]
+
+        slate, max_len = self._decode(state, first, slate_lens)
+        scores = np.asarray(first, np.float32)
+        for i, (t, pol) in enumerate(zip(pane, policies)):
+            tel = RequestTelemetry(
+                request_id=t.request_id, user=t.request.user, policy=pol,
+                slate_len=slate_lens[i], pane_id=pane_id,
+                queue_delay=int(self._clock - t.request.now),
+                cache_hit=hit_flags[i], path=paths[i], generation=gen,
+                submitted_at=t.request.now, served_at=int(self._clock),
+                tag=t.request.tag)
+            t.response = Response(slate=slate[i, :slate_lens[i]].copy(),
+                                  scores=scores[i].copy(), telemetry=tel)
+            self._path_counts[paths[i]] += 1
+            self._queue_delays.append(tel.queue_delay)
+        self.requests += len(pane)
+
+    def _decode(self, state: Dict[str, Any], first_logits,
+                slate_lens: Sequence[int]) -> Tuple[np.ndarray, int]:
+        """finalize -> greedy slate, one jit call for the whole pane.
+
+        Uniform panes (every row on the configured default) take the
+        exact decode program the wave path always ran; heterogeneous
+        slate_lens decode to the pane max with per-row tails masked to
+        -1 inside the jit (see ServingEngine.decode_slate)."""
+        eng = self.engine
+        max_len = max(slate_lens)
+        if all(sl == slate_lens[0] for sl in slate_lens):
+            slate = eng.decode_slate(state, first_logits, max_len)
+        else:
+            b = eng.scfg.max_batch
+            row_lens = np.full(b, max_len, np.int32)
+            row_lens[:len(slate_lens)] = slate_lens
+            slate = eng.decode_slate(state, first_logits, max_len,
+                                     row_lens=row_lens)
+        self.decode_steps += max_len - 1
+        return slate, max_len
+
+    def _lookup_or_admit(self, reqs: Sequence[Request],
+                         policies: Sequence[str],
+                         cacheable: Sequence[bool], gen: int, now: int,
+                         ) -> Tuple[List[Dict[str, Any]], List[bool]]:
+        """Per-row prefill states, admitting all misses in ONE
+        fixed-shape batch prefill (one prefill per pane worst case).
+
+        Cacheable rows probe the LRU once per ROW (hit/miss counters
+        stay in request units even when a pane repeats a user) and
+        misses are admitted under the ``(user, generation)`` key.
+        Uncacheable rows in a mixed pane (policy "fresh") are admitted
+        *ephemerally* in the same prefill batch — their history is read
+        at the serve cutoff, which moves with the clock, so caching them
+        would violate the cache-key invariant; they are keyed by
+        (user, policy) for intra-pane dedup only (one pane = one serve
+        clock).
+        """
+        eng = self.engine
+        entries: Dict[Any, Dict[str, Any]] = {}
+        hit_flags: List[bool] = []
+        keys: List[Any] = []
+        miss_seen = set()
+        miss_keys: List[Any] = []
+        miss_rows: List[int] = []
+        for i, (req, pol, can) in enumerate(zip(reqs, policies, cacheable)):
+            if can:
+                key = req.user
+                # probe once per ROW (not per unique user) so hit/miss
+                # counters stay in request units even when a pane repeats
+                # a user; the admission list itself is deduplicated
+                e = self.cache.get(req.user, gen)
+                if e is None:
+                    if key not in miss_seen:
+                        miss_seen.add(key)
+                        miss_keys.append(key)
+                        miss_rows.append(i)
+                    hit_flags.append(False)
+                else:
+                    entries[key] = e
+                    hit_flags.append(True)
+            else:
+                key = (req.user, pol, "ephemeral")
+                if key not in miss_seen:
+                    miss_seen.add(key)
+                    miss_keys.append(key)
+                    miss_rows.append(i)
+                hit_flags.append(False)
+            keys.append(key)
+        if miss_rows:
+            hists = self._histories([reqs[i] for i in miss_rows],
+                                    [policies[i] for i in miss_rows], now)
+            toks, valid = eng.pad_tokens(hists, eng.scfg.prefill_len)
+            state = eng.prefill(toks, valid)
+            self.prefill_calls += 1
+            host = _host_state(state)  # one device→host sync per leaf
+            for j, (key, i) in enumerate(zip(miss_keys, miss_rows)):
+                entry = _slice_row(host, j)
+                if cacheable[i]:
+                    self.cache.put(reqs[i].user, gen, entry)
+                entries[key] = entry
+        return [entries[k] for k in keys], hit_flags
+
+    # ------------------------------------------------------------------
+    # Warming
+    # ------------------------------------------------------------------
+
+    def warm(self, users, now: int) -> int:
+        """Cache-warming pass: admit ``users``' batch-history prefill
+        states without serving — the post-snapshot precompute a daily job
+        runs so live traffic starts on the inject-only path. Returns the
+        number of states prefilled. No-op when caching is off or the
+        policy is uncacheable. Clamped to the first ``cache_entries``
+        users (pass highest-priority users first), and stops early once
+        the byte budget is full — warming past either budget would
+        prefill states that LRU-evict before they serve."""
+        users = np.asarray(users, np.int64).ravel()[:self.cache.budget]
+        if not self.cfg.use_cache or self.injector.cfg.policy == "fresh":
+            return 0
+        self._advance(now)
+        gen = self._sync_generation(now)
+        before = self.cache.misses
+        ev0 = self.cache.evictions
+        b = self.engine.scfg.max_batch
+        pol = self.injector.cfg.policy
+        for lo in range(0, len(users), b):
+            pane = [Request(user=int(u), now=int(now))
+                    for u in users[lo:lo + b]]
+            self._lookup_or_admit(pane, [pol] * len(pane),
+                                  [True] * len(pane), gen, int(now))
+            if self.cache.evictions > ev0:
+                break  # a budget (the byte budget — the entry clamp above
+                #        already bounds entries) is full: further warming
+                #        would only evict states we just paid to prefill
+        return self.cache.misses - before
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Counters + aggregated request telemetry."""
+        delays = np.asarray(self._queue_delays, np.int64)
+        return {
+            "requests": self.requests, "panes": self.panes,
+            "pending": len(self._queue),
+            "prefill_calls": self.prefill_calls,
+            "inject_calls": self.inject_calls,
+            "decode_steps": self.decode_steps,
+            "deadline_flushes": self._deadline_flushes,
+            "paths": dict(self._path_counts),
+            "queue_delay": {
+                "window": int(len(delays)),
+                "p50": float(np.percentile(delays, 50)) if len(delays) else 0.0,
+                "p99": float(np.percentile(delays, 99)) if len(delays) else 0.0,
+                "max": int(delays.max()) if len(delays) else 0,
+            },
+            "cache": self.cache.stats(),
+        }
+
+
+# ----------------------------------------------------------------------
+# Per-row state plumbing (batch axis of every cache leaf is axis 1;
+# verified for attention K/V, SSM conv/state and the Jamba hybrid)
+#
+# Entries are HOST-resident numpy: slicing/assembling panes row-by-row in
+# eager jax ops was the serve path's dominant cost (hundreds of tiny
+# dispatches per pane), while numpy slices/concats are C-speed memcpy.
+# The assembled pane crosses to the device (mesh-sharded, when the engine
+# has one) exactly once, at the next jit boundary — the engine device_puts
+# every operand to its serving layout. On a CPU host this is free (it is
+# all host memory); on TPU it trades HBM residency for PCIe transfer per
+# admission+hit, and the device-resident follow-up is a paged state pool
+# (slot-indexed gather instead of host concat) — see docs/serving.md.
+# ----------------------------------------------------------------------
+
+def _host_state(state: Dict[str, Any]) -> Dict[str, Any]:
+    """Pull a batched sequence-form prefill state to host, whole-pane at a
+    time (one device→host sync per cache leaf, not per row)."""
+    return {
+        "caches": jax.tree.map(np.asarray, state["caches"]),
+        "valid": np.asarray(state["valid"]),
+        "next_pos": np.asarray(state["next_pos"]),
+        "last_logits": np.asarray(state["logits"][:, -1]),
+    }
+
+
+def _slice_row(host: Dict[str, Any], row: int) -> Dict[str, Any]:
+    """One row of a host-form pane state, copied so the entry doesn't pin
+    the whole pane's buffers in the LRU."""
+    return {
+        "caches": jax.tree.map(lambda x: x[:, row:row + 1].copy(),
+                               host["caches"]),
+        "valid": host["valid"][row:row + 1].copy(),
+        "next_pos": host["next_pos"][row:row + 1].copy(),
+        "last_logits": host["last_logits"][row].copy(),
+    }
+
+
+def _pad_list(entries: List[Dict[str, Any]], b: int) -> List[Dict[str, Any]]:
+    if not entries:
+        raise ValueError("empty pane")
+    return entries + [entries[0]] * (b - len(entries))
+
+
+def _cat_rows(entries: List[Dict[str, Any]], b: int) -> Dict[str, Any]:
+    """Assemble per-user entries into one max_batch engine state (short
+    panes padded by repeating row 0; padding rows are discarded later)."""
+    rows = _pad_list(entries, b)
+    return {
+        "caches": jax.tree.map(lambda *xs: np.concatenate(xs, axis=1),
+                               *[e["caches"] for e in rows]),
+        "valid": np.concatenate([e["valid"] for e in rows], axis=0),
+        "next_pos": np.concatenate([e["next_pos"] for e in rows], axis=0),
+        "logits": None,  # per-row slices don't keep full prefill logits
+    }

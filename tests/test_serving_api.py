@@ -1,0 +1,576 @@
+"""Request-level serving API: typed Request/Response lifecycle, the
+micro-batching Gateway, mixed-policy panes, deadlines, telemetry, and
+the legacy wave wrapper's bitwise-compatibility contract.
+
+The load-bearing claims, matching the redesign's acceptance criteria:
+
+  * the Gateway serves **bitwise-identical** slates/scores to the
+    legacy wave API on the same request trace — whether the trace
+    arrives as waves (submit_many+flush) or trickles in request by
+    request (per-request submit, pane-full flushes) — on a single
+    device AND through the 1×1-mesh sharded code path;
+  * a **mixed-policy pane** (batch/inject/fresh rows coexisting)
+    serves every row the same result as a single-policy server of that
+    row's policy — arms are request labels, not deployments;
+  * a **deadline** flushes a partial pane on the clock; nothing is
+    served before it fires, everything queued is served when it does;
+  * construction-time validation fails fast with clear messages
+    instead of shape errors inside jit.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.ab import ARM_POLICIES, arm_requests, request_arm
+from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+from repro.core.injection import FeatureInjector, InjectionConfig
+from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+from repro.launch.mesh import make_serving_mesh
+from repro.models.model import init_params
+from repro.serving.api import (Event, Request, as_event, assign_arms,
+                               hash_arm)
+from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.loop import InjectionServer, ServeResult
+from repro.serving.scheduler import Gateway, ServerConfig
+
+DAY = 86400
+N_USERS, N_ITEMS = 40, 300
+FEATURE_LEN = 24
+
+_CFG = ModelConfig(name="api-test", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128,
+                   vocab_size=N_ITEMS + 256, rope_theta=1e4,
+                   tie_embeddings=True)
+_PARAMS = init_params(_CFG, jax.random.PRNGKey(0), dtype=jnp.float32)
+_SCFG = ServingConfig(max_batch=4, prefill_len=32, inject_len=8,
+                      cache_capacity=64)
+_ENGINE = ServingEngine(_CFG, _PARAMS, _SCFG)
+_MESH_ENGINE = None  # built lazily: the 1×1-mesh sharded code path
+
+
+def _mesh_engine():
+    global _MESH_ENGINE
+    if _MESH_ENGINE is None:
+        _MESH_ENGINE = ServingEngine(_CFG, _PARAMS, _SCFG,
+                                     mesh=make_serving_mesh(1, 1))
+    return _MESH_ENGINE
+
+
+def _injector(policy="inject"):
+    store = BatchFeatureStore(FeatureStoreConfig(
+        n_users=N_USERS, feature_len=FEATURE_LEN))
+    rts = RealtimeFeatureService(RealtimeConfig(
+        n_users=N_USERS, buffer_len=8, ingest_latency=0))
+    rng = np.random.RandomState(0)
+    us, its, tss = (rng.randint(0, N_USERS, 1500),
+                    rng.randint(0, N_ITEMS, 1500),
+                    rng.randint(0, 5 * DAY, 1500))
+    store.extend(us, its, tss)
+    rts.extend(us, its, tss)
+    return FeatureInjector(
+        InjectionConfig(policy=policy, feature_len=FEATURE_LEN), store, rts)
+
+
+def _gateway(policy="inject", engine=None, **cfg_kw):
+    cfg_kw.setdefault("slate_len", 3)
+    cfg_kw.setdefault("cache_entries", 64)
+    return Gateway(engine or _ENGINE, _injector(policy), ServerConfig(**cfg_kw))
+
+
+def _ingest(gw, users, items, ts):
+    for u, i, t in zip(users, items, ts):
+        gw.observe((int(u), int(i), int(t)))
+
+
+# ----------------------------------------------------------------------
+# Construction-time validation
+# ----------------------------------------------------------------------
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="unknown policy"):
+        Request(user=1, now=0, policy="bogus")
+    with pytest.raises(ValueError, match="slate_len"):
+        Request(user=1, now=0, slate_len=0)
+    with pytest.raises(ValueError, match="deadline"):
+        Request(user=1, now=100, deadline=99)
+    with pytest.raises(ValueError, match="user"):
+        Request(user=-1, now=0)
+    # frozen: a request cannot be mutated after validation
+    r = Request(user=1, now=0)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        r.user = 2
+    # deadline == now is legal (serve at the next clock advance)
+    assert Request(user=1, now=5, deadline=5).deadline == 5
+
+
+def test_server_config_validation():
+    with pytest.raises(ValueError, match="slate_len"):
+        ServerConfig(slate_len=0)
+    with pytest.raises(ValueError, match="cache_entries"):
+        ServerConfig(cache_entries=0)
+    with pytest.raises(ValueError, match="cache_bytes"):
+        ServerConfig(cache_bytes=0)
+
+
+def test_gateway_construction_validation():
+    # slate_len beyond the item vocabulary fails at construction, not as
+    # a shape error inside the decode jit
+    with pytest.raises(ValueError, match="vocab"):
+        _gateway(slate_len=_CFG.vocab_size + 1)
+    # an unknown policy string on the injector fails at the facade
+    inj = _injector()
+    object.__setattr__(inj.cfg, "policy", "bogus")
+    with pytest.raises(ValueError, match="unknown default policy"):
+        Gateway(_ENGINE, inj, ServerConfig())
+
+
+def test_submit_rejects_oversized_slate_len():
+    gw = _gateway()
+    with pytest.raises(ValueError, match="vocab"):
+        gw.submit(Request(user=1, now=0, slate_len=_CFG.vocab_size + 1))
+    assert gw.pending == 0  # the bad request never entered the queue
+
+
+def test_submit_rejects_out_of_range_user():
+    """An unknown user fails at the call site with a clear message —
+    inside pane execution it would be a numpy IndexError that takes the
+    whole pane (including innocent co-batched requests) down."""
+    gw = _gateway()
+    with pytest.raises(ValueError, match="out of range"):
+        gw.submit(Request(user=N_USERS, now=0))
+    assert gw.pending == 0
+
+
+def test_drain_dequeues_each_pane_as_it_serves(monkeypatch):
+    """If a later pane raises mid-drain, already-served tickets must be
+    out of the queue: a retried flush may re-try the failed pane but
+    must never re-execute responses the caller already holds."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    real_execute = type(gw)._execute
+    calls = {"n": 0}
+
+    def flaky(self, pane, gen):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected pane failure")
+        real_execute(self, pane, gen)
+
+    monkeypatch.setattr(type(gw), "_execute", flaky)
+    reqs = [Request(user=u, now=now) for u in range(8)]  # 2 panes at b=4
+    with pytest.raises(RuntimeError, match="injected"):
+        gw.submit_many(reqs)
+    # pane 1 served and dequeued; pane 2 failed and stayed queued
+    assert gw.pending == 4 and gw.requests == 4
+    monkeypatch.setattr(type(gw), "_execute", real_execute)
+    first_pane_ids = [t.response.telemetry.pane_id
+                      for t in gw.flush(now) if t.response]
+    # recovery serves ONLY the failed pane; earlier responses untouched
+    assert gw.requests == 8 and gw.pending == 0
+    assert len(first_pane_ids) == 4
+
+
+def test_submit_many_validates_whole_batch_before_enqueuing():
+    """A bad request mid-batch must not strand earlier rows in the
+    queue with their ticket handles lost to the exception."""
+    gw = _gateway()
+    reqs = [Request(user=1, now=0),
+            Request(user=2, now=0, slate_len=_CFG.vocab_size + 1)]
+    with pytest.raises(ValueError, match="vocab"):
+        gw.submit_many(reqs)
+    assert gw.pending == 0  # nothing enqueued, nothing orphaned
+
+
+def test_as_event_coercions():
+    assert as_event((1, 2, 3)) == Event(1, 2, 3)
+    assert as_event(Event(1, 2, 3)) == Event(1, 2, 3)
+
+    class Rec:
+        user, item, ts = 4, 5, 6
+    assert as_event(Rec()) == Event(4, 5, 6)
+    with pytest.raises(TypeError, match="event"):
+        as_event("nope")
+
+
+# ----------------------------------------------------------------------
+# Wave wrapper vs Gateway: bitwise equivalence on the same trace
+# ----------------------------------------------------------------------
+
+def _run_trace_wave(srv: InjectionServer):
+    """The legacy path: pre-grouped waves through serve(users, now)."""
+    rng = np.random.RandomState(3)
+    now = 5 * DAY + 100
+    scores, slates = [], []
+    for wave in range(3):
+        u = rng.randint(0, N_USERS, 10)
+        _ingest(srv.gateway, u, (u + 3) % N_ITEMS, np.full(10, now - 30))
+        q = rng.randint(0, N_USERS, 11)  # 2 full panes + a padded one
+        with pytest.warns(DeprecationWarning):
+            r = srv.serve(q, now)
+        scores.append(r.scores)
+        slates.append(r.slate)
+        now += 300
+    return np.concatenate(scores), np.concatenate(slates)
+
+
+def _run_trace_trickle(gw: Gateway):
+    """The same trace as per-request arrivals: submit() one at a time
+    (full panes flush eagerly, in arrival order), flush() at wave end."""
+    rng = np.random.RandomState(3)
+    now = 5 * DAY + 100
+    scores, slates = [], []
+    for wave in range(3):
+        u = rng.randint(0, N_USERS, 10)
+        _ingest(gw, u, (u + 3) % N_ITEMS, np.full(10, now - 30))
+        q = rng.randint(0, N_USERS, 11)
+        tickets = [gw.submit(Request(user=int(x), now=now)) for x in q]
+        gw.flush(now)
+        scores.append(np.stack([t.response.scores for t in tickets]))
+        slates.append(np.stack([t.response.slate for t in tickets]))
+        now += 300
+    return np.concatenate(scores), np.concatenate(slates)
+
+
+@pytest.mark.parametrize("mesh", [False, True], ids=["plain", "mesh1x1"])
+def test_wave_vs_gateway_bitwise(mesh):
+    """The redesign's core contract: the Gateway serves bitwise-identical
+    results to the legacy wave API on the same request trace — including
+    when arrivals trickle in (different pane composition: rows are
+    independent, so micro-batching may regroup them freely)."""
+    eng = _mesh_engine() if mesh else _ENGINE
+    sw, lw = _run_trace_wave(InjectionServer(eng, _injector(),
+                                             ServerConfig(slate_len=3,
+                                                          cache_entries=64)))
+    sg, lg = _run_trace_trickle(_gateway(engine=eng))
+    np.testing.assert_array_equal(lw, lg)   # slates: bitwise
+    np.testing.assert_array_equal(sw, sg)   # scores: bitwise
+
+
+def test_wave_wrapper_matches_submit_many_flush():
+    """serve(users, now) is literally submit_many + flush on default
+    requests — same tickets, same order, same counters."""
+    a, b = _gateway(), _gateway()
+    srv = InjectionServer.__new__(InjectionServer)
+    srv.gateway = a
+    users = np.random.RandomState(5).randint(0, N_USERS, 9)
+    now = 5 * DAY + 100
+    with pytest.warns(DeprecationWarning):
+        r = srv.serve(users, now)
+    assert isinstance(r, ServeResult)
+    tickets = b.submit_many(
+        [Request(user=int(u), now=now) for u in users])
+    b.flush(now)
+    np.testing.assert_array_equal(
+        r.scores, np.stack([t.response.scores for t in tickets]))
+    np.testing.assert_array_equal(
+        r.slate, np.stack([t.response.slate for t in tickets]))
+    assert a.panes == b.panes and a.prefill_calls == b.prefill_calls
+
+
+def test_legacy_serve_honors_non_monotonic_now():
+    """The pre-Gateway loop served each wave AT the call's ``now`` even
+    when an earlier call used a later time (replay/backfill tools rely
+    on it); the shim must rewind the gateway's otherwise-monotonic
+    clock rather than silently serving at max(now, previous now)."""
+    t0, t1 = 5 * DAY + 100, 6 * DAY + 100  # a generation apart
+    users = np.arange(6)
+    time_traveler = InjectionServer(_ENGINE, _injector(),
+                                    ServerConfig(slate_len=3,
+                                                 cache_entries=64))
+    oracle = InjectionServer(_ENGINE, _injector(),
+                             ServerConfig(slate_len=3, cache_entries=64))
+    with pytest.warns(DeprecationWarning):
+        time_traveler.serve(users, t1)        # clock moves to t1
+        r_back = time_traveler.serve(users, t0)   # ...then rewinds
+        r_ref = oracle.serve(users, t0)           # fresh server at t0
+    np.testing.assert_array_equal(r_back.scores, r_ref.scores)
+    np.testing.assert_array_equal(r_back.slate, r_ref.slate)
+
+
+def test_legacy_serve_emits_deprecation_warning():
+    srv = InjectionServer(_ENGINE, _injector(),
+                          ServerConfig(slate_len=3, cache_entries=16))
+    with pytest.warns(DeprecationWarning, match="Gateway"):
+        srv.serve(np.arange(4), 5 * DAY + 100)
+
+
+# ----------------------------------------------------------------------
+# Mixed-policy panes
+# ----------------------------------------------------------------------
+
+def test_mixed_policy_pane_matches_single_policy_servers():
+    """Rows with different per-request policies coexist in one pane and
+    each row matches a single-policy server of its policy, row for row —
+    the A/B split as request labels instead of deployments."""
+    now = 5 * DAY + 100
+    users = np.arange(8)
+    policies = ["batch", "inject", "fresh", "inject",
+                "batch", "fresh", "inject", "batch"]
+    fresh_items = (users + 7) % N_ITEMS
+
+    gw = _gateway()  # default policy "inject"; per-request overrides
+    _ingest(gw, users, fresh_items, np.full(8, now - 20))
+    tickets = gw.submit_many(
+        [Request(user=int(u), now=now, policy=p)
+         for u, p in zip(users, policies)])
+    gw.flush(now)
+    # the pane really was mixed (not silently re-partitioned by policy)
+    pane_pols = {}
+    for t in tickets:
+        pane_pols.setdefault(t.response.telemetry.pane_id, set()).add(
+            t.response.telemetry.policy)
+    assert any(len(ps) > 1 for ps in pane_pols.values())
+
+    for pol in ("batch", "inject", "fresh"):
+        ref = _gateway(pol)
+        _ingest(ref, users, fresh_items, np.full(8, now - 20))
+        rt = ref.submit_many([Request(user=int(u), now=now) for u in users])
+        ref.flush(now)
+        for i, p in enumerate(policies):
+            if p != pol:
+                continue
+            np.testing.assert_allclose(
+                tickets[i].response.scores, rt[i].response.scores,
+                atol=2e-3, rtol=2e-3)
+            np.testing.assert_array_equal(
+                tickets[i].response.slate, rt[i].response.slate)
+
+
+def test_mixed_pane_policies_actually_differ():
+    """The mixed-pane test above would be vacuous if the three policies
+    served identical scores — show they move for at least one row."""
+    now = 5 * DAY + 100
+    users = np.arange(6)
+    gw = _gateway()
+    _ingest(gw, users, (users + 7) % N_ITEMS, np.full(6, now - 20))
+    outs = {}
+    for pol in ("batch", "inject"):
+        t = gw.submit_many([Request(user=int(u), now=now, policy=pol)
+                            for u in users])
+        gw.flush(now)
+        outs[pol] = np.stack([x.response.scores for x in t])
+    assert np.abs(outs["batch"] - outs["inject"]).max() > 1e-3
+
+
+def test_fresh_rows_in_mixed_pane_never_cached():
+    """Ephemeral admissions: a fresh-policy row rides the pane's
+    admission prefill but must not enter the (user, generation) cache —
+    its history depends on the request cutoff."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    gw.submit_many([Request(user=0, now=now, policy="fresh"),
+                    Request(user=1, now=now, policy="inject")])
+    gw.flush(now)
+    gen = gw.injector.generation(now)
+    assert (1, gen) in gw.cache and (0, gen) not in gw.cache
+
+
+# ----------------------------------------------------------------------
+# Scheduling: pane-full, deadlines, duplicates
+# ----------------------------------------------------------------------
+
+def test_pane_full_flush_on_submit():
+    gw = _gateway()
+    now = 5 * DAY + 100
+    tk = [gw.submit(Request(user=u, now=now + u)) for u in range(3)]
+    assert gw.pending == 3 and not any(t.done for t in tk)
+    t4 = gw.submit(Request(user=3, now=now + 3))  # fills the max_batch=4 pane
+    assert gw.pending == 0 and t4.done and all(t.done for t in tk)
+    # queue delay telemetry: served at the newest arrival's clock
+    assert tk[0].response.telemetry.queue_delay == 3
+    assert t4.response.telemetry.queue_delay == 0
+
+
+def test_deadline_triggers_partial_pane_flush():
+    """A short pane flushes when the clock reaches a queued deadline —
+    latency beats utilization once a deadline fires."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    t1 = gw.submit(Request(user=1, now=now, deadline=now + 30))
+    t2 = gw.submit(Request(user=2, now=now + 5))
+    assert gw.pending == 2 and not t1.done
+    served = gw.tick(now + 29)           # deadline not reached
+    assert served == [] and gw.pending == 2
+    served = gw.tick(now + 30)           # deadline fires -> partial pane
+    assert {t.request_id for t in served} == {t1.request_id, t2.request_id}
+    assert t1.done and t2.done and gw.pending == 0
+    assert t1.response.telemetry.queue_delay == 30
+    assert gw.stats()["deadline_flushes"] == 1
+    # slate is real: the padded pane still decodes distinct items
+    assert len(set(t1.response.slate.tolist())) == 3
+
+
+def test_submit_at_deadline_flushes_immediately():
+    """An arrival whose clock reaches a pending deadline triggers the
+    flush itself — no tick needed."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    t1 = gw.submit(Request(user=1, now=now, deadline=now + 10))
+    t2 = gw.submit(Request(user=2, now=now + 10))  # clock hits t1's deadline
+    assert t1.done and t2.done and gw.pending == 0
+
+
+def test_duplicate_users_one_wave_single_admission():
+    """A wave repeating one cold user counts per-row misses but pays one
+    admission prefill (same contract as the legacy wave path)."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    tk = gw.submit_many([Request(user=5, now=now)] * 3)
+    gw.flush(now)
+    assert all(t.done for t in tk)
+    assert gw.cache.misses == 3 and gw.cache.hits == 0
+    assert gw.prefill_calls == 1
+    # all three rows got identical results (same user, same state)
+    np.testing.assert_array_equal(tk[0].response.slate, tk[1].response.slate)
+    np.testing.assert_array_equal(tk[0].response.scores, tk[2].response.scores)
+    tk2 = gw.submit_many([Request(user=5, now=now + 10)] * 2)
+    gw.flush(now + 10)
+    assert gw.cache.hits == 2 and all(
+        t.response.telemetry.cache_hit for t in tk2)
+
+
+def test_cache_aware_ordering_over_the_queue():
+    """When more than a pane's worth is queued, hits group into pure-hit
+    panes ahead of misses (the wave path's 3x win, preserved)."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    gw.warm(np.arange(4), now)           # users 0..3 cached
+    reqs = [Request(user=u, now=now) for u in (0, 30, 1, 31, 2, 32, 3, 33)]
+    tk = gw.submit_many(reqs)            # 2 full panes, interleaved hit/miss
+    assert all(t.done for t in tk)
+    hit_panes = {t.response.telemetry.pane_id for t in tk
+                 if t.response.telemetry.cache_hit}
+    miss_panes = {t.response.telemetry.pane_id for t in tk
+                  if not t.response.telemetry.cache_hit}
+    assert hit_panes and miss_panes and not (hit_panes & miss_panes)
+
+
+# ----------------------------------------------------------------------
+# Per-request slate lengths
+# ----------------------------------------------------------------------
+
+def test_per_request_slate_len_masked_decode():
+    """Rows with different slate_lens share one pane: each row gets
+    exactly its length, items distinct, and the greedy prefix matches
+    what a uniform decode of the pane max would have chosen."""
+    gw = _gateway(slate_len=4)
+    now = 5 * DAY + 100
+    lens = [1, 2, 4, 3]
+    tk = gw.submit_many([Request(user=u, now=now, slate_len=sl)
+                         for u, sl in zip(range(4), lens)])
+    gw.flush(now)
+    uniform = _gateway(slate_len=4)
+    tu = uniform.submit_many([Request(user=u, now=now) for u in range(4)])
+    uniform.flush(now)
+    for t, tu_i, sl in zip(tk, tu, lens):
+        slate = t.response.slate
+        assert slate.shape == (sl,)
+        assert len(set(slate.tolist())) == sl
+        assert t.response.telemetry.slate_len == sl
+        np.testing.assert_array_equal(slate, tu_i.response.slate[:sl])
+
+
+def test_engine_masked_decode_slate_matches_unmasked():
+    """decode_slate(row_lens=) == plain decode_slate with tails masked
+    to -1 — the masked program changes layout, never the chosen items."""
+    eng = _ENGINE
+    rng = np.random.RandomState(0)
+    hists = [list(rng.randint(1, _CFG.vocab_size, 20)) for _ in range(4)]
+    toks, valid = eng.pad_tokens(hists, 32)
+    state = eng.prefill(toks, valid)
+    first = state["logits"][:, -1]
+    full = eng.decode_slate(state, first, 4)
+    lens = np.array([1, 4, 2, 3], np.int32)
+    masked = eng.decode_slate(state, first, 4, row_lens=lens)
+    for r in range(4):
+        np.testing.assert_array_equal(masked[r, :lens[r]], full[r, :lens[r]])
+        assert (masked[r, lens[r]:] == -1).all()
+
+
+# ----------------------------------------------------------------------
+# Telemetry + facade
+# ----------------------------------------------------------------------
+
+def test_telemetry_paths_and_generation():
+    gw = _gateway()
+    now = 5 * DAY + 100
+    users = np.arange(4)
+    t1 = gw.submit_many([Request(user=int(u), now=now) for u in users])
+    gw.flush(now)
+    assert all(t.response.telemetry.path == "prefill" for t in t1)
+    gen = gw.injector.generation(now)
+    assert all(t.response.telemetry.generation == gen for t in t1)
+    # no fresh events since the probe -> pure cache reads
+    t2 = gw.submit_many([Request(user=int(u), now=now + 5) for u in users])
+    gw.flush(now + 5)
+    assert all(t.response.telemetry.path == "cached" for t in t2)
+    assert all(t.response.telemetry.cache_hit for t in t2)
+    # fresh events arrive -> the hits take the inject path
+    _ingest(gw, users, (users + 9) % N_ITEMS, np.full(4, now + 6))
+    t3 = gw.submit_many([Request(user=int(u), now=now + 10) for u in users])
+    gw.flush(now + 10)
+    assert all(t.response.telemetry.path == "inject" for t in t3)
+    st = gw.stats()
+    assert st["paths"] == {"prefill": 4, "cached": 4, "inject": 4}
+    assert st["queue_delay"]["window"] == 12
+
+
+def test_tick_rolls_generation_and_purges():
+    """gateway.tick is the clock: a day boundary rolls the snapshot and
+    eagerly purges the dead generation's cached states."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    gw.submit_many([Request(user=u, now=now) for u in range(4)])
+    gw.flush(now)
+    gen_a = gw.injector.generation(now)
+    assert len(gw.cache) == 4
+    gw.tick(now + DAY)
+    gen_b = gw.injector.generation(now + DAY)
+    assert gen_b != gen_a
+    assert len(gw.cache) == 0 and gw.cache.invalidations == 4
+
+
+def test_observe_feeds_both_stores():
+    gw = _gateway()
+    now = 5 * DAY + 100
+    n_log = len(gw.injector.batch._log)
+    gw.observe(Event(user=3, item=17, ts=now))
+    assert len(gw.injector.batch._log) == n_log + 1
+    sfx = gw.injector.fresh_suffix(np.array([3]), now + 1)
+    assert (17, now) in sfx[0]
+
+
+def test_warm_through_gateway():
+    gw = _gateway(cache_entries=6)
+    n = gw.warm(np.arange(20), 5 * DAY + 100)
+    assert n == 6 and len(gw.cache) == 6 and gw.cache.evictions == 0
+
+
+# ----------------------------------------------------------------------
+# Per-request A/B assignment
+# ----------------------------------------------------------------------
+
+def test_hash_arm_deterministic_and_salted():
+    a = [hash_arm(u) for u in range(200)]
+    assert a == [hash_arm(u) for u in range(200)]      # stable
+    assert set(a) == {"control", "treatment"}          # both arms used
+    b = [hash_arm(u, salt=1) for u in range(200)]
+    assert a != b                                      # re-randomizable
+    assert assign_arms(np.arange(5)) == tuple(hash_arm(u) for u in range(5))
+    with pytest.raises(ValueError):
+        hash_arm(1, arms=())
+
+
+def test_arm_requests_label_the_wave():
+    reqs = arm_requests(np.arange(10), now=123, salt=0)
+    for u, r in enumerate(reqs):
+        assert r.tag == request_arm(u) and r.policy == ARM_POLICIES[r.tag]
+        assert r.user == u and r.now == 123
+    # both arms really occur and serve together in mixed panes
+    gw = _gateway()
+    tk = gw.submit_many(arm_requests(np.arange(8), now=5 * DAY + 100))
+    assert {t.response.telemetry.tag for t in tk} == {"control", "treatment"}

@@ -9,11 +9,13 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 
 """Sharded-vs-single-device serving equivalence check.
 
-Builds the same tiny model + feature plane twice — one InjectionServer
-on the plain single-device engine, one on an 8×1 ("data","model") CPU
-mesh — and drives both through interleaved ingest/serve waves including
-LRU-cached hits and a snapshot-generation rollover. Asserts slates are
-IDENTICAL and logits agree within float tolerance at every wave.
+Builds the same tiny model + feature plane twice — one request-level
+Gateway on the plain single-device engine, one on an 8×1
+("data","model") CPU mesh — and drives both through the same request
+trace (per-request submits, interleaved ingest) including LRU-cached
+hits, a mixed-policy wave (batch/inject/fresh rows sharing panes), and
+a snapshot-generation rollover. Asserts slates are IDENTICAL and
+logits agree within float tolerance at every wave.
 
   PYTHONPATH=src python tools/sharded_equiv_check.py
 
@@ -35,8 +37,9 @@ def main() -> int:
     from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
     from repro.launch.mesh import make_serving_mesh
     from repro.models.model import init_params
+    from repro.serving.api import Request
     from repro.serving.engine import ServingConfig, ServingEngine
-    from repro.serving.loop import InjectionServer, ServerConfig
+    from repro.serving.scheduler import Gateway, ServerConfig
 
     assert len(jax.devices()) == 8, jax.devices()
 
@@ -64,7 +67,7 @@ def main() -> int:
         inj = FeatureInjector(InjectionConfig(
             policy="inject", feature_len=24), store, rts)
         eng = ServingEngine(cfg, params, scfg, mesh=mesh)
-        return InjectionServer(eng, inj, ServerConfig(
+        return Gateway(eng, inj, ServerConfig(
             slate_len=3, cache_entries=64))
 
     single = server(mesh=None)
@@ -72,28 +75,41 @@ def main() -> int:
 
     rng = np.random.RandomState(1)
     now = 5 * DAY + 100
+    policies = [None, "batch", "inject", "fresh"]
     # wave 1-3: interleaved ingest/serve inside one generation (misses,
-    # then hits with fresh suffixes); wave 4: past the next snapshot
-    # boundary — generation rollover purges and re-prefills
+    # then hits with fresh suffixes; wave 3 mixes per-request policies
+    # in shared panes); wave 4: past the next snapshot boundary —
+    # generation rollover purges and re-prefills
     for wave, at in enumerate([now, now + 120, now + 300,
                                now + DAY + 100]):
         u = rng.randint(0, n_users, 12)
         it = rng.randint(0, n_items, 12)
         ts = np.full(12, at - 40)
-        for srv in (single, sharded):
-            srv.injector.batch.extend(u, it, ts)
-            srv.injector.realtime.extend(u, it, ts)
+        for gw in (single, sharded):
+            gw.observe_many(u, it, ts)
         q = rng.randint(0, n_users, 19)  # pane-splits at max_batch=8
-        r1 = single.serve(q, at)
-        r8 = sharded.serve(q, at)
-        assert (r1.slate == r8.slate).all(), \
-            f"wave {wave}: slates diverged\n{r1.slate}\n{r8.slate}"
-        diff = np.abs(r1.scores - r8.scores).max()
+        reqs = [Request(user=int(x), now=at,
+                        policy=policies[j % 4] if wave == 2 else None)
+                for j, x in enumerate(q)]
+        out = []
+        for gw in (single, sharded):
+            tickets = [gw.submit(r) for r in reqs]  # trickle: pane-full
+            gw.flush(at)                            # flushes + tail
+            out.append((np.stack([t.response.slate for t in tickets]),
+                        np.stack([t.response.scores for t in tickets]),
+                        sum(t.response.telemetry.cache_hit
+                            for t in tickets)))
+        (s1, l1, h1), (s8, l8, h8) = out
+        assert (s1 == s8).all(), \
+            f"wave {wave}: slates diverged\n{s1}\n{s8}"
+        assert h1 == h8, f"wave {wave}: hit counts diverged {h1} != {h8}"
+        diff = np.abs(l1 - l8).max()
         assert diff < 2e-3, f"wave {wave}: logits max|Δ|={diff}"
         print(f"wave {wave}: slates equal, logits max|Δ|={diff:.2e}, "
-              f"hits={r8.cache_hits} misses={r8.cache_misses}")
+              f"hits={h8}")
     assert sharded.cache.hits > 0 and sharded.cache.invalidations > 0
     assert sharded.cache.shards == 8
+    assert sharded.stats()["paths"]["inject"] > 0
     print("SHARDED-EQUIV OK")
     return 0
 
