@@ -129,13 +129,20 @@ def main():
     print(f"mixed-policy pane: arms {sorted(served)} served together "
           f"(pane {arms[0].response.telemetry.pane_id})")
 
-    # next day: the snapshot generation rolls on the clock, cached
-    # states invalidate, misses re-prefill from the new snapshot
+    # next day: the snapshot generation rolls on the clock — a WARM
+    # handoff, not a purge: users whose snapshot rows are unchanged
+    # keep their cached states (rekeyed to the new generation), only
+    # users with events in the rolled period re-prefill
     gw.tick(now + DAY)
+    ro = gw.stats()["rollover"]
+    print(f"next day: generation rolled — rekeyed={ro['rekeyed']} "
+          f"invalidated={ro['invalidated']} (only changed users lose "
+          f"their states)")
     r2 = [gw.submit(Request(user=u, now=now + DAY)) for u in range(8)]
     gw.flush()
     miss = sum(not t.response.telemetry.cache_hit for t in r2)
-    print(f"next day: {miss}/8 misses (generation rolled, states rebuilt); "
+    print(f"first post-rollover pane: {miss}/8 misses (changed users "
+          f"re-prefilled, the rest served from rekeyed states); "
           f"slates (first 3): {[t.response.slate.tolist() for t in r2[:3]]}")
     st = gw.stats()
     print(f"telemetry: paths={st['paths']} queue_delay_p99="

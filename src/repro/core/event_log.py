@@ -216,6 +216,57 @@ class EventLog:
             raise ValueError("empty log has no min ts")
         return int(self._ts[:self._n].min())
 
+    # ------------------------------------------------------------------
+    # delta queries (the incremental-snapshot backbone)
+    # ------------------------------------------------------------------
+    def users_with_events(self, lo: int, hi: int, start: int = 0,
+                          ) -> np.ndarray:
+        """Sorted unique users with >=1 event with ``lo <= ts < hi``
+        among the events appended at log positions ``>= start``.
+
+        One vectorized columnar scan — no index required, so it works
+        identically with or without a pending suffix. ``start`` lets a
+        caller restrict the scan to events appended after a known point
+        (e.g. "since the previous snapshot was built"), which is how
+        late-arriving events with old timestamps are caught.
+        """
+        n = self._n
+        start = max(int(start), 0)
+        if start >= n or hi <= lo:
+            return np.empty(0, np.int64)
+        ts = self._ts[start:n]
+        mask = (ts >= lo) & (ts < hi)
+        if not mask.any():
+            return np.empty(0, np.int64)
+        return np.unique(self._user[start:n][mask])
+
+    def changed_users(self, prev_cutoff: int, new_cutoff: int, window: int,
+                      since: int = 0) -> np.ndarray:
+        """Users whose ``[cutoff - window, cutoff)`` event set may differ
+        between snapshot cutoffs ``prev_cutoff`` and ``new_cutoff``:
+
+        * events *entering* by timestamp — ts in ``[prev, new)``;
+        * events *aging out* of the lookback window — ts in
+          ``[prev - window, new - window)``;
+        * *late arrivals* — events appended at log positions ``>= since``
+          (pass the log length when the previous snapshot was built) whose
+          ts already lands inside the new window: the previous snapshot
+          cannot contain them no matter what their timestamp says.
+
+        The result is a **superset** of the truly-changed users (an
+        entering event can still materialize to identical features if it
+        falls outside the freshest-``feature_len`` cut), which is the safe
+        direction: rematerializing an unchanged user is wasted work, not
+        wrong output. A user absent from this set has a bitwise-identical
+        event window at both cutoffs.
+        """
+        entering = self.users_with_events(prev_cutoff, new_cutoff)
+        aging = self.users_with_events(prev_cutoff - window,
+                                       new_cutoff - window)
+        late = self.users_with_events(new_cutoff - window, new_cutoff,
+                                      start=since)
+        return np.union1d(np.union1d(entering, aging), late)
+
     def user_events(self, user: int) -> List[Tuple[int, int]]:
         """(ts, item) pairs for one user, sorted — debug/compat helper."""
         if self._base is None or self._base_n != self._n:

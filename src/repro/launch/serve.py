@@ -82,7 +82,9 @@ def run_loop(cfg, params, args, mesh=None) -> None:
     inj = FeatureInjector(InjectionConfig(
         policy=args.policy, feature_len=feature_len), store, rts)
     gw = Gateway(eng, inj, ServerConfig(
-        slate_len=4, cache_entries=n_users))
+        slate_len=4, cache_entries=n_users,
+        snapshot_build_budget=args.build_budget,
+        rewarm_budget=args.rewarm))
 
     now = 5 * DAY + 100
     t0 = time.time()
@@ -124,6 +126,18 @@ def run_loop(cfg, params, args, mesh=None) -> None:
         # tail-flush tick just advanced to (now + deadline) — a backdated
         # arrival would inflate its queue-delay telemetry
         now += max(60, deadline)
+        if args.roll_midway and r == args.rounds // 2 - 1:
+            # jump the clock past the next daily boundary so the second
+            # half of the trace serves across a generation rollover
+            # (warm handoff; with --build-budget the build amortizes
+            # over the ticks the serving rounds issue)
+            now = ((now // DAY) + 1) * DAY + 100
+            gw.tick(now)
+            ro = gw.stats()["rollover"]
+            print(f"-- generation rollover at {now}: rekeyed="
+                  f"{ro['rekeyed']} invalidated={ro['invalidated']} "
+                  f"pending_build={ro['pending_build_users']} "
+                  f"pending_rewarm={ro['pending_rewarm']}")
 
     st = gw.stats()
     if args.ab:
@@ -137,6 +151,11 @@ def run_loop(cfg, params, args, mesh=None) -> None:
           f"p99={st['queue_delay']['p99']:.0f}s "
           f"deadline_flushes={st['deadline_flushes']} "
           f"panes={st['panes']}")
+    ro = st["rollover"]
+    print(f"rollover: rollovers={ro['rollovers']} rekeyed={ro['rekeyed']} "
+          f"invalidated={ro['invalidated']} rebuilt={ro['rebuilt']} "
+          f"build_steps={ro['build_steps']} "
+          f"build_time={ro['build_time_s']*1e3:.1f}ms")
     print(f"stats: {st}")
 
 
@@ -159,6 +178,18 @@ def main() -> None:
                     help="--loop: per-request A/B arms (hash-assigned "
                          "control=batch / treatment=inject policies "
                          "sharing the same mixed-policy panes)")
+    ap.add_argument("--roll-midway", action="store_true",
+                    help="--loop: jump the clock past a daily boundary "
+                         "halfway through the trace so the second half "
+                         "serves across a generation rollover (warm "
+                         "handoff)")
+    ap.add_argument("--build-budget", type=int, default=None,
+                    help="--loop: amortize snapshot builds — at most "
+                         "this many users materialized per clock call "
+                         "(default: synchronous full build)")
+    ap.add_argument("--rewarm", type=int, default=0,
+                    help="--loop: re-prefill up to this many "
+                         "rollover-invalidated users per tick")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="run sharded over a data,model mesh (e.g. 8,1); "
                          "--batch must be a multiple of the data size")

@@ -103,9 +103,13 @@ class Request:
 class RequestTelemetry:
     """Structured per-request observability, attached to every Response.
 
-    ``queue_delay`` is in request-clock units (``served_at - now``):
-    how long the request waited for its pane to fill or its deadline to
-    fire. ``path`` says what the request actually paid:
+    ``queue_delay`` is in request-clock units (``served_at - now``,
+    clamped at 0): how long the request waited for its pane to fill or
+    its deadline to fire. The clamp matters only under the deprecated
+    legacy shim, whose non-monotonic replay rewinds the gateway clock —
+    a request pending from a later wave would otherwise record a
+    negative delay and pollute the ``stats()`` percentiles. ``path``
+    says what the request actually paid:
 
       * ``"prefill"`` — the row paid a batch-history prefill this
         request (cache miss, uncacheable policy, or caching disabled);

@@ -22,10 +22,10 @@
     Gateway directly.
 
 The serving design itself — the prefill-state cache keyed
-``(user, snapshot generation)``, the cache-key invariant, eager
-generation purge, cache-aware pane formation, host-resident LRU entries
-— lives with the scheduler; see the module docstring of
-``serving/scheduler.py`` and docs/serving.md.
+``(user, snapshot generation)``, the cache-key invariant, the
+warm-handoff generation rollover, cache-aware pane formation,
+host-resident LRU entries — lives with the scheduler; see the module
+docstring of ``serving/scheduler.py`` and docs/serving.md.
 """
 from __future__ import annotations
 

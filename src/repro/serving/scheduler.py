@@ -33,10 +33,23 @@ cached: their history depends on ``now``, violating the cache-key
 invariant). This is what makes the paper's A/B split expressible on one
 serving fleet: arms are request labels, not server deployments.
 
+**Generation rollover.** The daily boundary is no longer a cliff: with
+``ServerConfig.snapshot_build_budget`` set, the snapshot build runs as
+an incremental :class:`~repro.core.feature_store.SnapshotBuilder`
+advanced one budget-bounded slice per clock call (serving keeps
+reading the previous generation until the build lands), and when the
+generation does roll, the cache takes a **warm handoff**: entries
+whose snapshot row is bitwise unchanged are rekeyed to the new
+generation (identical history => identical prefill state — results
+are bitwise what a purge + re-prefill would serve), changed users are
+invalidated and optionally re-warmed between panes by a budgeted
+``warm_step``. See docs/serving.md "Generation rollover".
+
 **Telemetry.** Every response carries a :class:`RequestTelemetry`
 (pane id, queue delay, cache hit, prefill-vs-inject path, generation);
 ``Gateway.stats()`` aggregates them (path counts, queue-delay
-percentiles over a sliding window) on top of the engine/cache counters.
+percentiles over a sliding window, rollover rekey/invalidate/build
+counters) on top of the engine/cache counters.
 
 The legacy wave API (``InjectionServer.serve(users, now)`` in
 serving/loop.py) is a thin wrapper over this facade and serves
@@ -102,6 +115,7 @@ class PrefillStateCache:
         self.misses = 0
         self.evictions = 0
         self.invalidations = 0
+        self.rekeys = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -153,10 +167,49 @@ class PrefillStateCache:
         self.invalidations += len(stale)
         return len(stale)
 
+    def rekey_generation(self, old_gen: int, new_gen: int, changed,
+                         ) -> Tuple[int, int]:
+        """Warm handoff across a generation rollover.
+
+        Entries keyed ``(user, old_gen)`` whose user is **not** in
+        ``changed`` are rekeyed to ``(user, new_gen)`` in place (LRU
+        order and byte accounting preserved): an unchanged snapshot row
+        means an identical batch history, and a prefill state is a pure
+        function of (history, params) — so the entry under the new key
+        is bitwise the entry a fresh admission would build. Changed
+        users' entries — and entries from any other stale generation —
+        are invalidated. The caller is responsible for ``changed`` being
+        the *exact* row-diff between two frozen generations
+        (``BatchFeatureStore.changed_users_between``); rekeying across a
+        recomputed (evicted) generation is never safe.
+
+        Returns ``(rekeyed, invalidated)`` counts.
+        """
+        changed_set = {int(u) for u in np.asarray(changed).ravel()}
+        live_new = {u for (u, g) in self._entries if g == new_gen}
+        out: "OrderedDict[Tuple[int, int], Tuple[Dict[str, Any], int]]" = \
+            OrderedDict()
+        rekeyed = invalidated = 0
+        for (u, g), rec in self._entries.items():
+            if g == new_gen:
+                out[(u, g)] = rec
+            elif (g == old_gen and u not in changed_set
+                    and u not in live_new):
+                out[(u, new_gen)] = rec
+                rekeyed += 1
+            else:
+                self.bytes_per_shard -= rec[1]
+                invalidated += 1
+        self._entries = out
+        self.rekeys += rekeyed
+        self.invalidations += invalidated
+        return rekeyed, invalidated
+
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,
                 "misses": self.misses, "evictions": self.evictions,
                 "invalidations": self.invalidations,
+                "rekeys": self.rekeys,
                 "bytes_per_shard": self.bytes_per_shard,
                 "shards": self.shards}
 
@@ -176,14 +229,39 @@ class ServerConfig:
     its user list to it (warming past the budget would prefill states
     that evict before they ever serve), so a budget of 1 is legal but
     warms exactly one user.
+
+    **Rollover behavior.** ``warm_handoff`` keeps the rollover warm:
+    cached prefill states whose snapshot row is unchanged across the
+    generation roll are rekeyed to the new generation instead of purged
+    (results are bitwise identical either way — the handoff only changes
+    which rows pay a prefill). ``snapshot_build_budget`` switches the
+    daily job from one synchronous full materialization inside
+    ``submit``/``tick`` to an incremental delta build advanced by at
+    most that many users per clock call (``None`` keeps the legacy
+    synchronous build). ``rewarm_budget`` re-prefills up to that many
+    invalidated (changed) users per ``tick`` after a rollover, so the
+    miss storm drains between panes instead of on live requests (0 =
+    off; ``warm_step()`` can also be driven explicitly).
     """
     slate_len: int = 4            # items decoded per request (default)
     cache_entries: int = 4096     # LRU budget (user-generation states)
     cache_bytes: Optional[int] = None  # per-shard byte budget (None = off)
     use_cache: bool = True        # False -> full prefill per request
     run_batch_jobs: bool = True   # roll due snapshots on the clock
+    warm_handoff: bool = True     # rekey unchanged rows across rollover
+    snapshot_build_budget: Optional[int] = None  # users per build step
+    rewarm_budget: int = 0        # users re-prefilled per tick post-roll
 
     def __post_init__(self):
+        if self.snapshot_build_budget is not None \
+                and self.snapshot_build_budget < 1:
+            raise ValueError(
+                f"snapshot_build_budget must be >= 1 when set (None runs "
+                f"the legacy synchronous build), got "
+                f"{self.snapshot_build_budget}")
+        if self.rewarm_budget < 0:
+            raise ValueError(
+                f"rewarm_budget must be >= 0, got {self.rewarm_budget}")
         if self.slate_len < 1:
             raise ValueError(
                 f"slate_len must be >= 1, got {self.slate_len}")
@@ -235,6 +313,11 @@ class Gateway:
         self._clock: Optional[int] = None
         self._queue: List[Ticket] = []
         self._next_id = 0
+        # incremental daily job (snapshot_build_budget mode)
+        self._builder = None          # in-flight SnapshotBuilder, or None
+        self._skip_register: List[int] = []  # past-retention boundaries,
+        #                               registered when the build installs
+        self._rewarm_queue: deque = deque()  # users invalidated at handoff
         # counters / telemetry
         self.requests = 0
         self.panes = 0
@@ -244,6 +327,9 @@ class Gateway:
         self._path_counts = {"prefill": 0, "inject": 0, "cached": 0}
         self._queue_delays: deque = deque(maxlen=4096)
         self._deadline_flushes = 0
+        self._rollover = {"rollovers": 0, "rekeyed": 0, "invalidated": 0,
+                          "rebuilt": 0, "build_steps": 0,
+                          "build_time_s": 0.0}
 
     # ------------------------------------------------------------------
     # Clock / snapshot plumbing
@@ -265,46 +351,187 @@ class Gateway:
             self._clock = int(now)
 
     def _sync_generation(self, now: int) -> int:
-        """Roll due snapshots and purge cache entries the roll staled."""
+        """Advance the daily job and hand the cache across any resulting
+        generation roll.
+
+        With ``snapshot_build_budget`` unset the job is the legacy
+        synchronous ``maybe_run_due_snapshots`` (a due boundary
+        materializes the full plane inside this call); with a budget the
+        in-flight :class:`SnapshotBuilder` advances by at most one
+        budget-sized slice per call, so a 1M-user build amortizes across
+        panes instead of stalling one submit. Either way, the moment the
+        generation actually rolls the cache takes the **warm handoff**
+        (see ``_handoff``) instead of the old purge-everything."""
         if self.cfg.run_batch_jobs:
-            self.injector.batch.maybe_run_due_snapshots(now)
+            if self.cfg.snapshot_build_budget is None:
+                self.injector.batch.maybe_run_due_snapshots(now)
+            else:
+                self._step_snapshot_build(now)
         gen = self.injector.generation(now)
         if gen != self._gen:
-            self.cache.invalidate_except(gen)
+            self._handoff(self._gen, gen)
             self._gen = gen
         return gen
+
+    def _step_snapshot_build(self, now: int) -> None:
+        """One budget-bounded slice of the amortized daily job: start a
+        builder when a boundary has passed, advance it.
+
+        Catch-up matches the synchronous job's contract: after a gap of
+        several periods, every missed boundary inside the retention
+        window is built **in order** (one builder each — which also
+        keeps every delta one-period small), and only boundaries that
+        would be evicted immediately register without arrays. The
+        generation therefore rolls forward boundary by boundary as
+        builds land, never jumping over a generation the synchronous
+        path would have materialized."""
+        store = self.injector.batch
+        c = store.cfg
+        latest_due = store.latest_due_boundary(now)
+        if self._builder is None:
+            if not store._snapshot_times:
+                # cold store: there is no previous generation to delta
+                # against or serve from, so amortizing buys nothing —
+                # delegate the whole catch-up to the synchronous job
+                store.maybe_run_due_snapshots(now)
+                return
+            due = store._snapshot_times[-1] + c.snapshot_period
+            if due > latest_due:
+                return
+            # boundaries already past retention will register WITHOUT
+            # arrays (the synchronous job's retention skip) — but only
+            # once the first real build installs: registering them now
+            # would make a register-only generation the serving latest
+            # for the whole build window, and everything cached against
+            # it would key to a recompute-on-read (non-frozen)
+            # generation, violating the cache-key invariant
+            skipped = []
+            while c.snapshot_retention is not None and due <= latest_due \
+                    - c.snapshot_retention * c.snapshot_period:
+                skipped.append(due)
+                due += c.snapshot_period
+            self._builder = store.begin_snapshot(due)
+            self._skip_register = skipped
+        b = self._builder
+        remaining = b.step(self.cfg.snapshot_build_budget)
+        self._rollover["build_steps"] += 1
+        if remaining == 0:
+            self._rollover["build_time_s"] += b.step_time_s
+            for due in self._skip_register:
+                store._register_time(due)
+            self._skip_register = []
+            self._builder = None
+
+    def _handoff(self, old_gen: Optional[int], new_gen: int) -> None:
+        """Cache handoff at a generation roll: rekey entries whose
+        snapshot row is unchanged (identical history => identical prefill
+        state, so served results are bitwise what a purge + re-prefill
+        would produce), invalidate the changed rest, and queue the
+        invalidated users for budgeted re-warming. Falls back to the
+        purge-everything rollover whenever the exact changed set cannot
+        be certified (first generation, handoff disabled, a generation
+        gap, or either generation evicted/recomputed)."""
+        if old_gen is None:
+            # first sync: the gateway is discovering the current
+            # generation, not rolling one — nothing can be cached yet
+            self.cache.invalidate_except(new_gen)
+            return
+        changed = None
+        if self.cfg.warm_handoff and old_gen >= 0:
+            changed = self.injector.batch.changed_users_between(
+                old_gen, new_gen)
+        stale_users = [u for (u, g) in self.cache._entries if g != new_gen]
+        if changed is None:
+            invalidated = self.cache.invalidate_except(new_gen)
+            rekeyed = 0
+        else:
+            rekeyed, invalidated = self.cache.rekey_generation(
+                old_gen, new_gen, changed)
+        # MRU-first re-warm order: the hottest invalidated users are the
+        # ones most likely to be requested right after the roll
+        # (dict.fromkeys dedups a user cached under two stale generations)
+        self._rewarm_queue = deque(dict.fromkeys(
+            u for u in reversed(stale_users)
+            if (u, new_gen) not in self.cache))
+        self._rollover["rollovers"] += 1
+        self._rollover["rekeyed"] += rekeyed
+        self._rollover["invalidated"] += invalidated
 
     # ------------------------------------------------------------------
     # Ingestion (the other half of the facade)
     # ------------------------------------------------------------------
 
+    def _event_user_limit(self) -> int:
+        """Max exclusive user id BOTH stores accept. Ingestion validates
+        against this *before* any write: the batch log and the realtime
+        ring must never diverge on what they absorbed — a half-applied
+        event batch would make the merge double-count or drop events
+        forever after."""
+        limit = self.injector.batch.cfg.n_users
+        if self.injector.realtime is not None:
+            limit = min(limit, self.injector.realtime.cfg.n_users)
+        return limit
+
     def observe(self, ev) -> None:
         """Ingest one feedback event into both feature stores (offline
         log + realtime stream). Accepts an :class:`Event`, a
         ``(user, item, ts)`` tuple, or any object with those attributes
-        — the same hook signature the platform exposes."""
+        — the same hook signature the platform exposes. The user id is
+        validated against *both* stores up front so a rejected event
+        mutates neither."""
         ev = as_event(ev)
+        limit = self._event_user_limit()
+        if not 0 <= ev.user < limit:
+            raise IndexError(
+                f"event user {ev.user} out of range [0, {limit}) for the "
+                f"feature stores; nothing was ingested")
         self.injector.batch.append(ev.user, ev.item, ev.ts)
         if self.injector.realtime is not None:
             self.injector.realtime.ingest(ev.user, ev.item, ev.ts)
 
     def observe_many(self, users, items, tss) -> None:
-        """Columnar bulk ingest (parallel arrays) of feedback events."""
+        """Columnar bulk ingest (parallel arrays) of feedback events.
+
+        The whole batch is validated against BOTH stores before either
+        absorbs anything: the batch log's own range check fires before
+        it writes, but the realtime store's used to fire only *after*
+        the log had already extended — a bad batch left the two stores
+        silently diverged (events the merge would count once instead of
+        twice, or the reverse). A rejected batch now mutates nothing."""
+        users = np.asarray(users, np.int64).ravel()
+        items = np.asarray(items).ravel()
+        tss = np.asarray(tss).ravel()
+        if not (len(users) == len(items) == len(tss)):
+            raise ValueError(
+                f"observe_many wants parallel arrays; got lengths "
+                f"users={len(users)} items={len(items)} ts={len(tss)}")
+        if len(users):
+            limit = self._event_user_limit()
+            lo, hi = int(users.min()), int(users.max())
+            if lo < 0 or hi >= limit:
+                raise IndexError(
+                    f"event user ids out of range [0, {limit}): "
+                    f"[{lo}, {hi}]; nothing was ingested")
         self.injector.batch.extend(users, items, tss)
         if self.injector.realtime is not None:
             self.injector.realtime.extend(users, items, tss)
 
     def tick(self, now: int) -> List[Ticket]:
-        """Advance the gateway clock: roll due snapshots (purging the
-        cache on a generation change) and flush the queue if any pending
-        request's deadline has been reached. Returns tickets served by a
-        deadline flush (usually none)."""
+        """Advance the gateway clock: advance/roll due snapshots (warm
+        handoff on a generation change), flush the queue if any pending
+        request's deadline has been reached, then spend the configured
+        ``rewarm_budget`` re-prefilling users the last rollover
+        invalidated. Returns tickets served by a deadline flush
+        (usually none)."""
         self._advance(now)
         self._sync_generation(self._clock)
+        served: List[Ticket] = []
         if self._deadline_due():
             self._deadline_flushes += 1
-            return self._drain(full_panes_only=False)
-        return []
+            served = self._drain(full_panes_only=False)
+        if self.cfg.rewarm_budget:
+            self.warm_step(self.cfg.rewarm_budget)
+        return served
 
     # ------------------------------------------------------------------
     # Submission
@@ -542,7 +769,12 @@ class Gateway:
             tel = RequestTelemetry(
                 request_id=t.request_id, user=t.request.user, policy=pol,
                 slate_len=slate_lens[i], pane_id=pane_id,
-                queue_delay=int(self._clock - t.request.now),
+                # clamped at 0: the deprecated legacy shim rewinds the
+                # otherwise-monotonic clock for non-monotonic serve(now)
+                # replays, and a pending request from a later wave would
+                # otherwise record a negative delay and pollute the
+                # stats() queue-delay percentiles
+                queue_delay=max(0, int(self._clock - t.request.now)),
                 cache_hit=hit_flags[i], path=paths[i], generation=gen,
                 submitted_at=t.request.now, served_at=int(self._clock),
                 tag=t.request.tag)
@@ -639,6 +871,29 @@ class Gateway:
     # Warming
     # ------------------------------------------------------------------
 
+    def _admit_users(self, users, gen: int, now: int) -> Tuple[int, bool]:
+        """Admit ``users``' batch-history prefill states in fixed
+        ``max_batch`` panes (no serving). Returns ``(prefilled,
+        evicted)`` — stops after the first pane whose admission evicts:
+        a full cache budget means further warming would only evict
+        states we just paid to prefill. Shared by ``warm`` (daily-job
+        precompute) and ``warm_step`` (post-rollover re-warm) so the
+        admission semantics cannot drift between them."""
+        pol = self.injector.cfg.policy
+        b = self.engine.scfg.max_batch
+        warmed = 0
+        ev0 = self.cache.evictions
+        for lo in range(0, len(users), b):
+            pane = [Request(user=int(u), now=int(now))
+                    for u in users[lo:lo + b]]
+            before = self.cache.misses
+            self._lookup_or_admit(pane, [pol] * len(pane),
+                                  [True] * len(pane), gen, int(now))
+            warmed += self.cache.misses - before
+            if self.cache.evictions > ev0:
+                return warmed, True
+        return warmed, False
+
     def warm(self, users, now: int) -> int:
         """Cache-warming pass: admit ``users``' batch-history prefill
         states without serving — the post-snapshot precompute a daily job
@@ -653,20 +908,40 @@ class Gateway:
             return 0
         self._advance(now)
         gen = self._sync_generation(now)
-        before = self.cache.misses
-        ev0 = self.cache.evictions
-        b = self.engine.scfg.max_batch
-        pol = self.injector.cfg.policy
-        for lo in range(0, len(users), b):
-            pane = [Request(user=int(u), now=int(now))
-                    for u in users[lo:lo + b]]
-            self._lookup_or_admit(pane, [pol] * len(pane),
-                                  [True] * len(pane), gen, int(now))
-            if self.cache.evictions > ev0:
-                break  # a budget (the byte budget — the entry clamp above
-                #        already bounds entries) is full: further warming
-                #        would only evict states we just paid to prefill
-        return self.cache.misses - before
+        warmed, _ = self._admit_users(users, gen, int(now))
+        return warmed
+
+    def warm_step(self, budget: Optional[int] = None) -> int:
+        """Budget-bounded post-rollover re-warm: prefill up to ``budget``
+        users whose cached states the last generation handoff invalidated
+        (MRU-first — the hottest users are the likeliest next arrivals),
+        skipping any the live traffic already re-admitted. Run between
+        panes (``tick`` drives it when ``rewarm_budget`` is set) so the
+        post-rollover miss storm drains on idle clock instead of on live
+        requests. Returns the number of states prefilled."""
+        if budget is None:
+            budget = self.cfg.rewarm_budget
+        if budget <= 0 or not self._rewarm_queue:
+            return 0
+        if not self.cfg.use_cache or self.injector.cfg.policy == "fresh" \
+                or self._clock is None:
+            return 0
+        gen = self._gen
+        users: List[int] = []
+        while self._rewarm_queue and len(users) < budget:
+            u = self._rewarm_queue.popleft()
+            if (u, gen) not in self.cache:
+                users.append(int(u))
+        warmed, evicted = self._admit_users(users, gen, int(self._clock))
+        if evicted:
+            # a cache budget is full again — live traffic refilled it.
+            # Re-warming further would only evict resident (possibly
+            # just-rewarmed) states, so the storm is over: drop the
+            # rest of the queue, or every subsequent tick would repeat
+            # this churn
+            self._rewarm_queue.clear()
+        self._rollover["rebuilt"] += warmed
+        return warmed
 
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
@@ -685,6 +960,12 @@ class Gateway:
                 "p50": float(np.percentile(delays, 50)) if len(delays) else 0.0,
                 "p99": float(np.percentile(delays, 99)) if len(delays) else 0.0,
                 "max": int(delays.max()) if len(delays) else 0,
+            },
+            "rollover": {
+                **self._rollover,
+                "pending_build_users": (self._builder.remaining
+                                        if self._builder is not None else 0),
+                "pending_rewarm": len(self._rewarm_queue),
             },
             "cache": self.cache.stats(),
         }

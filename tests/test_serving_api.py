@@ -519,19 +519,34 @@ def test_telemetry_paths_and_generation():
     assert st["queue_delay"]["window"] == 12
 
 
-def test_tick_rolls_generation_and_purges():
-    """gateway.tick is the clock: a day boundary rolls the snapshot and
-    eagerly purges the dead generation's cached states."""
+def test_tick_rolls_generation_with_warm_handoff():
+    """gateway.tick is the clock: a day boundary rolls the snapshot. By
+    default the rollover is a warm handoff — users whose snapshot rows
+    are unchanged keep their cached states under the new generation
+    (rekeyed, not purged); with warm_handoff=False the legacy
+    purge-everything rollover applies."""
     gw = _gateway()
     now = 5 * DAY + 100
     gw.submit_many([Request(user=u, now=now) for u in range(4)])
     gw.flush(now)
     gen_a = gw.injector.generation(now)
     assert len(gw.cache) == 4
-    gw.tick(now + DAY)
+    gw.tick(now + DAY)  # no events between generations: nothing changed
     gen_b = gw.injector.generation(now + DAY)
     assert gen_b != gen_a
+    assert len(gw.cache) == 4 and gw.cache.rekeys == 4
+    assert gw.cache.invalidations == 0
+    assert all(g == gen_b for (_, g) in gw.cache._entries)
+    st = gw.stats()["rollover"]
+    assert st["rollovers"] == 1 and st["rekeyed"] == 4
+
+    # legacy contract, still available: purge-everything rollover
+    gw = _gateway(warm_handoff=False)
+    gw.submit_many([Request(user=u, now=now) for u in range(4)])
+    gw.flush(now)
+    gw.tick(now + DAY)
     assert len(gw.cache) == 0 and gw.cache.invalidations == 4
+    assert gw.cache.rekeys == 0
 
 
 def test_observe_feeds_both_stores():

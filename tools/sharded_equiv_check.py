@@ -14,8 +14,12 @@ Gateway on the plain single-device engine, one on an 8×1
 ("data","model") CPU mesh — and drives both through the same request
 trace (per-request submits, interleaved ingest) including LRU-cached
 hits, a mixed-policy wave (batch/inject/fresh rows sharing panes), and
-a snapshot-generation rollover. Asserts slates are IDENTICAL and
-logits agree within float tolerance at every wave.
+TWO snapshot-generation rollovers: one crossed by a request's clock
+mid-trace, one rolled explicitly by ``tick()`` between waves so the
+warm handoff (rekeyed unchanged rows serving the next wave, changed
+rows re-prefilled) is exercised and its telemetry compared across
+meshes. Asserts slates are IDENTICAL and logits agree within float
+tolerance at every wave.
 
   PYTHONPATH=src python tools/sharded_equiv_check.py
 
@@ -78,10 +82,29 @@ def main() -> int:
     policies = [None, "batch", "inject", "fresh"]
     # wave 1-3: interleaved ingest/serve inside one generation (misses,
     # then hits with fresh suffixes; wave 3 mixes per-request policies
-    # in shared panes); wave 4: past the next snapshot boundary —
-    # generation rollover purges and re-prefills
+    # in shared panes); wave 4: past the next snapshot boundary — the
+    # generation rolls mid-trace (warm handoff: unchanged rows rekey,
+    # changed rows re-prefill); wave 5: an explicit mid-trace tick()
+    # rolls ANOTHER generation with only a handful of changed users,
+    # then the wave serves mostly from rekeyed entries
     for wave, at in enumerate([now, now + 120, now + 300,
-                               now + DAY + 100]):
+                               now + DAY + 100, now + 2 * DAY + 100]):
+        if wave == 4:
+            # events for a FEW users only, then roll the generation on
+            # the clock before any request arrives: the rollover itself
+            # is the thing under test here
+            u5 = np.arange(5)
+            it5 = rng.randint(0, n_items, 5)
+            for gw in (single, sharded):
+                gw.observe_many(u5, it5, np.full(5, at - 3600))
+                gw.tick(at - 60)
+            r1 = single.stats()["rollover"]
+            r8 = sharded.stats()["rollover"]
+            assert r1 == r8, f"rollover stats diverged\n{r1}\n{r8}"
+            assert r8["rekeyed"] > 0 and r8["invalidated"] > 0, r8
+            assert single.cache.rekeys == sharded.cache.rekeys > 0
+            print(f"mid-trace rollover: rekeyed={r8['rekeyed']} "
+                  f"invalidated={r8['invalidated']} (both meshes)")
         u = rng.randint(0, n_users, 12)
         it = rng.randint(0, n_items, 12)
         ts = np.full(12, at - 40)
