@@ -25,7 +25,12 @@ Sections
                      the micro-batching scheduler) vs the legacy wave
                      path on the same traffic: throughput parity at 100%
                      hit rate + the per-request queue+serve latency
-                     percentiles only the request API can measure
+                     percentiles only the request API can measure, plus
+                     the continuous scheduler over the paged device
+                     state pool (max_wait=0: zero sim-time queue delay,
+                     slates bitwise equal to the wave path, compiled
+                     gather/scatter collective count recorded from
+                     tools/slot_pool_check.py)
                      (writes BENCH_scheduler.json)
   rollover           the daily-boundary cost: eager purge + synchronous
                      snapshot build (legacy) vs warm handoff +
@@ -517,6 +522,18 @@ def bench_scheduler(smoke: bool = False, out_path: str = None):
     (submit -> response), recorded as req_p50/p99 next to the pane
     serve latency and the sim-time queue-delay telemetry.
 
+      4. ``gateway_continuous`` — the same per-request trickle through
+         the continuous scheduler (``max_wait=0``) over the paged
+         device-resident state pool (``pool_slots``): every arrival is
+         served immediately in a padded partial pane, so the sim-time
+         queue delay collapses to zero (vs the trickle row's
+         deadline-bounded p99) at the price of one engine pane per
+         request. Its slates are checked bitwise against the wave
+         path's (``slates_equal_wave``) — the pool's one-hot
+         gather/scatter and the partial-pane padding are exact — and
+         the compiled gather/scatter collective count (expected 0) is
+         recorded from a ``tools/slot_pool_check.py`` subprocess run.
+
     Rounds are **interleaved across the three paths** (wave round,
     gateway_wave round, trickle round, repeat): shared CI hosts
     throttle on a seconds-to-minutes timescale, and sequential
@@ -590,24 +607,31 @@ def bench_scheduler(smoke: bool = False, out_path: str = None):
         scfg = ServerConfig(slate_len=4, cache_entries=4096)
         t00 = 5 * DAY + 100
 
-        # three independent stacks fed identical seeded traffic; their
+        # four independent stacks fed identical seeded traffic; their
         # timed rounds run interleaved (see docstring)
+        pool_slots = 1024
         srv = InjectionServer(eng, build(n_users), scfg)   # wave
         gww = Gateway(eng, build(n_users), scfg)           # gateway_wave
         gwt = Gateway(eng, build(n_users), scfg)           # trickle
-        st_w = {"rng": np.random.RandomState(1), "now": t00, "lat": []}
+        gwc = Gateway(eng, build(n_users), ServerConfig(   # continuous
+            slate_len=4, pool_slots=pool_slots, max_wait=0))
+        st_w = {"rng": np.random.RandomState(1), "now": t00, "lat": [],
+                "slates": []}
         st_gw = {"rng": np.random.RandomState(1), "now": t00, "lat": []}
         st_tr = {"rng": np.random.RandomState(1), "now": t00,
                  "req_lat": [], "pane_lat": [], "pending": [],
                  "t_total": 0.0}
+        st_c = {"rng": np.random.RandomState(1), "now": t00,
+                "req_lat": [], "slates": [], "t_total": 0.0}
 
         def wave_round(s, timed=True):
             ingest(srv.gateway, s["rng"], n_users, s["now"])
             q = req_users(s["rng"], n_users, wave)
             t0 = time.perf_counter()
-            srv.serve(q, s["now"])
+            res = srv.serve(q, s["now"])
             if timed:
                 s["lat"].append(time.perf_counter() - t0)
+            s["slates"].append(np.asarray(res.slate))
             s["now"] += 60
 
         def gateway_wave_round(s, timed=True):
@@ -649,20 +673,39 @@ def bench_scheduler(smoke: bool = False, out_path: str = None):
             # the sim-time queue-delay telemetry
             s["now"] += deadline + 4
 
+        def continuous_round(s, timed=True):
+            ingest(gwc, s["rng"], n_users, s["now"])
+            t_seg0 = time.perf_counter()
+            for u in req_users(s["rng"], n_users, wave):
+                t = gwc.submit(Request(user=int(u), now=s["now"]))
+                assert t.done  # max_wait=0: served on arrival
+                if timed:
+                    s["req_lat"].append(
+                        time.perf_counter() - t.submitted_wall)
+                s["slates"].append(np.asarray(t.response.slate))
+                s["now"] += 1  # one arrival per sim-second
+            gwc.poll()  # claim the completion stream
+            if timed:
+                s["t_total"] += time.perf_counter() - t_seg0
+            # keep the four clocks in lockstep with the trickle stack
+            s["now"] += deadline + 4
+
         with _warnings.catch_warnings():
             _warnings.simplefilter("ignore", DeprecationWarning)
             # untimed: warm every cache, compile every jit
-            for g in (srv, gww, gwt):
+            for g in (srv, gww, gwt, gwc):
                 g.warm(np.arange(n_users), t00)
             wave_round(st_w, timed=False)
             gateway_wave_round(st_gw, timed=False)
             trickle_round(st_tr, timed=False)
+            continuous_round(st_c, timed=False)
             counters = [(g.cache.hits, g.cache.misses)
-                        for g in (srv, gww, gwt)]
+                        for g in (srv, gww, gwt, gwc)]
             for _ in range(rounds):  # timed, interleaved
                 wave_round(st_w)
                 gateway_wave_round(st_gw)
                 trickle_round(st_tr)
+                continuous_round(st_c)
 
         def hit_rate(g, h0m0):
             hits, misses = g.cache.hits - h0m0[0], g.cache.misses - h0m0[1]
@@ -695,6 +738,32 @@ def bench_scheduler(smoke: bool = False, out_path: str = None):
             "queue_delay_sim": st["queue_delay"],
             "paths": st["paths"], "deadline_flushes": st["deadline_flushes"],
         }
+        req_lat = np.asarray(st_c["req_lat"])
+        cst = gwc.stats()
+        wave_slates = np.concatenate(st_w["slates"])
+        cont_slates = np.stack(st_c["slates"])
+        trickle_p99 = row["gateway_trickle"]["queue_delay_sim"]["p99"]
+        cont_p99 = cst["queue_delay"]["p99"]
+        row["gateway_continuous"] = {
+            "rps": float(rounds * wave / st_c["t_total"]),
+            "req_p50_ms": float(np.percentile(req_lat, 50) * 1e3),
+            "req_p99_ms": float(np.percentile(req_lat, 99) * 1e3),
+            "hit_rate": hit_rate(gwc, counters[3]),
+            "queue_delay_sim": cst["queue_delay"],
+            "paths": cst["paths"], "panes": cst["panes"],
+            "pool_slots": pool_slots,
+            "slot_bytes": gwc.pool.slot_nbytes,
+            "slates_equal_wave": bool(
+                np.array_equal(wave_slates, cont_slates)),
+            # the latency lever: sim-time p99 queue delay vs the
+            # deadline-bounded trickle (>= 2x better is the bar; with
+            # max_wait=0 the continuous path's delay is identically 0)
+            "p99_queue_delay_vs_trickle": {
+                "trickle": float(trickle_p99),
+                "continuous": float(cont_p99),
+                "improved_2x": bool(2 * cont_p99 <= trickle_p99),
+            },
+        }
         row["facade_ratio"] = (row["gateway_wave"]["rps"]
                                / row["wave"]["rps"])
         row["trickle_ratio"] = (row["gateway_trickle"]["rps"]
@@ -710,11 +779,37 @@ def bench_scheduler(smoke: bool = False, out_path: str = None):
               f"{g['req_p50_ms']:7.1f}ms {g['req_p99_ms']:7.1f}ms "
               f"{g['pane_p50_ms']:7.1f}ms {g['pane_p99_ms']:7.1f}ms "
               f"{g['hit_rate'] * 100:5.1f}%")
+        c = row["gateway_continuous"]
+        print(f"  {n_users:7d} {'gateway_cont':>16s} {c['rps']:8.1f} "
+              f"{c['req_p50_ms']:7.1f}ms {c['req_p99_ms']:7.1f}ms "
+              f"{'--':>9s} {'--':>9s} {c['hit_rate'] * 100:5.1f}%")
         print(f"  {n_users:7d} facade ratio (gateway_wave/wave) = "
               f"{row['facade_ratio']:.2f} (parity bar: >= 0.90); trickle "
               f"ratio = {row['trickle_ratio']:.2f}; per-request latency is "
               f"the column the wave path cannot fill")
+        qd = c["p99_queue_delay_vs_trickle"]
+        print(f"  {n_users:7d} continuous: queue_delay_sim p99 "
+              f"{qd['trickle']:.0f}s -> {qd['continuous']:.0f}s "
+              f"(improved_2x={qd['improved_2x']}), slates_equal_wave="
+              f"{c['slates_equal_wave']}, {c['panes']} panes over "
+              f"{pool_slots} pool slots")
         results.append(row)
+
+    # the zero-collective proof for the pool's compiled gather/scatter:
+    # run the HLO scan in a subprocess (it forces an 8-device CPU
+    # topology via XLA_FLAGS, which must never leak into this process)
+    # and record the count next to the rows it certifies
+    import subprocess
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "slot_pool_check.py")],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")))
+    pool_ok = (proc.returncode == 0
+               and "SLOT-POOL OK collectives=0" in proc.stdout)
+    slot_pool_check = {"ok": bool(pool_ok),
+                       "collectives": 0 if pool_ok else None}
+    print(f"  slot_pool_check: ok={pool_ok} collectives="
+          f"{slot_pool_check['collectives']} (8-way data mesh HLO scan)")
 
     default_name = ("BENCH_scheduler_smoke.json" if smoke
                     else "BENCH_scheduler.json")
@@ -726,6 +821,7 @@ def bench_scheduler(smoke: bool = False, out_path: str = None):
                               "inject_len": eng.scfg.inject_len,
                               "feature_len": feature_len, "slate_len": 4,
                               "deadline_s": deadline},
+                   "slot_pool_check": slot_pool_check,
                    "results": results}, f, indent=2)
     print(f"  wrote {os.path.abspath(out_path)}")
     return results

@@ -148,6 +148,31 @@ def main():
     print(f"telemetry: paths={st['paths']} queue_delay_p99="
           f"{st['queue_delay']['p99']:.0f}s panes={st['panes']}")
 
+    # ------------------------------------------------------------------
+    # Continuous batching over the paged device-resident state pool:
+    # prefill states live in preallocated device slots (no host round
+    # trip per pane), max_wait=0 serves every arrival immediately in a
+    # padded partial pane, and completions stream out through poll()
+    # ------------------------------------------------------------------
+    cgw = Gateway(
+        eng,
+        FeatureInjector(InjectionConfig(policy="inject",
+                                        feature_len=feature_len), store, rts),
+        ServerConfig(slate_len=4, pool_slots=max(16, 2 * args.batch),
+                     max_wait=0))
+    now = now + DAY + 200
+    for step, u in enumerate(range(args.batch)):
+        t = cgw.submit(Request(user=u, now=now + step))
+        assert t.done  # continuous: served on arrival, no queueing
+    done = cgw.poll()  # claim the stream of completions exactly once
+    cst = cgw.stats()
+    print(f"\ncontinuous+pooled: {len(done)} arrivals served in "
+          f"{cst['panes']} partial panes, queue_delay_max="
+          f"{cst['queue_delay']['max']}s, pool="
+          f"{cst['cache']['slots']} slots "
+          f"({cst['cache']['free_slots']} free), slates match the "
+          f"wave path bitwise (tests/test_state_pool.py)")
+
 
 if __name__ == "__main__":
     main()

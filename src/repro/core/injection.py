@@ -123,6 +123,30 @@ class FeatureInjector:
             out.append(evs)
         return out
 
+    def fresh_suffix_tokens(self, users: np.ndarray, now: int,
+                            cap: Optional[int] = None,
+                            ) -> List[List[int]]:
+        """Per-user fresh suffixes as **model token** lists — what the
+        serving path actually injects on top of a cached prefill state.
+
+        Same visibility/dedup contract as :meth:`fresh_suffix`, with the
+        item->token mapping (``core.pipeline.items_to_tokens``) applied
+        and, when ``cap`` is given, each suffix truncated to its ``cap``
+        *newest* events first — truncating before tokenization is what
+        keeps the cached and full-prefill serving paths on identical
+        token streams (the engine's ``pad_tokens`` would otherwise clip
+        them at different lengths).
+        """
+        from repro.core.pipeline import items_to_tokens
+        out: List[List[int]] = []
+        for evs in self.fresh_suffix(users, now):
+            if cap is not None:
+                evs = evs[-cap:]
+            out.append(items_to_tokens(
+                np.asarray([item for item, _ in evs], np.int64),
+                np.ones(len(evs), np.int64)).tolist())
+        return out
+
     # ------------------------------------------------------------------
     def merge(self, batch: Features, recent: Features) -> Features:
         """merge(batch, recent) -> injected features of length feature_len."""

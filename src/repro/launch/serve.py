@@ -17,12 +17,21 @@ in one at a time (``gateway.submit``), feedback events ride along
 between them (``gateway.observe``), panes flush on pane-full or
 deadline (``gateway.tick``), and a per-request A/B split
 (``--ab``: hash-assigned control/treatment arms as per-request
-policies) shares the same panes. Prints per-round throughput plus the
-gateway's structured telemetry summary (paths, queue-delay
+policies) shares the same panes. Served results are claimed off the
+streaming surface (``gateway.poll``). Prints per-round throughput plus
+the gateway's structured telemetry summary (paths, queue-delay
 percentiles, cache stats):
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
       --loop --users 500 --rounds 4 [--ab]
+
+``--pool SLOTS`` swaps the host LRU for the paged device-resident
+state pool (slot-table cache, one-hot gather/scatter pane assembly)
+and ``--max-wait SECS`` turns on continuous batching (0 = serve every
+arrival immediately in a padded partial pane — the latency floor):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
+      --loop --pool 512 --max-wait 0 --users 500 --rounds 4
 
 ``--mesh data,model`` runs either mode **sharded**: the engine jits with
 NamedSharding in/out specs over a ("data", "model") mesh and request
@@ -83,8 +92,14 @@ def run_loop(cfg, params, args, mesh=None) -> None:
         policy=args.policy, feature_len=feature_len), store, rts)
     gw = Gateway(eng, inj, ServerConfig(
         slate_len=4, cache_entries=n_users,
+        pool_slots=args.pool, max_wait=args.max_wait,
         snapshot_build_budget=args.build_budget,
         rewarm_budget=args.rewarm))
+    if args.pool:
+        print(f"paged state pool: {args.pool} device slots x "
+              f"{gw.pool.slot_nbytes / 1e6:.2f} MB/slot"
+              + (f", continuous max_wait={args.max_wait}s"
+                 if args.max_wait is not None else ""))
 
     now = 5 * DAY + 100
     t0 = time.time()
@@ -112,9 +127,11 @@ def run_loop(cfg, params, args, mesh=None) -> None:
                 req = Request(user=u, now=now, deadline=now + deadline)
             tickets.append(gw.submit(req))
             now += 1  # one arrival per second
-        gw.tick(now + deadline)  # let the tail's deadline fire
+        served = gw.drain(now + deadline)  # tail deadline fires + claim
         dt = time.time() - t0
         assert all(t.done for t in tickets)
+        assert {t.request_id for t in served} >= {t.request_id
+                                                 for t in tickets}
         hits = sum(t.response.telemetry.cache_hit for t in tickets)
         qd = np.array([t.response.telemetry.queue_delay for t in tickets])
         print(f"round {r}: {len(tickets)} reqs in {dt * 1e3:6.1f}ms "
@@ -156,7 +173,7 @@ def run_loop(cfg, params, args, mesh=None) -> None:
           f"invalidated={ro['invalidated']} rebuilt={ro['rebuilt']} "
           f"build_steps={ro['build_steps']} "
           f"build_time={ro['build_time_s']*1e3:.1f}ms")
-    print(f"stats: {st}")
+    print(f"stats: {st.as_dict()}")
 
 
 def main() -> None:
@@ -190,6 +207,14 @@ def main() -> None:
     ap.add_argument("--rewarm", type=int, default=0,
                     help="--loop: re-prefill up to this many "
                          "rollover-invalidated users per tick")
+    ap.add_argument("--pool", type=int, default=None, metavar="SLOTS",
+                    help="--loop: paged device-resident state pool with "
+                         "this many slots (replaces the host LRU; must "
+                         "be >= --batch)")
+    ap.add_argument("--max-wait", type=int, default=None, metavar="SECS",
+                    help="--loop: continuous batching — flush a partial "
+                         "pane once its oldest arrival has waited this "
+                         "long (0 = serve every arrival immediately)")
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="run sharded over a data,model mesh (e.g. 8,1); "
                          "--batch must be a multiple of the data size")

@@ -1,9 +1,31 @@
+"""Public serving surface.
+
+The one serving facade is the :class:`Gateway` (submit/poll streaming
+lifecycle over typed Requests); :class:`InjectionServer` is the
+deprecated wave-era shim kept for bitwise-compat callers.
+"""
 from repro.serving.api import (  # noqa: F401
-    Event, Request, RequestTelemetry, Response, Ticket, as_event,
-    assign_arms, hash_arm)
+    Event, GatewayStats, Request, RequestTelemetry, Response,
+    RolloverStats, Ticket, as_event, assign_arms, hash_arm)
 from repro.serving.engine import (  # noqa: F401
     ServingConfig, ServingEngine, make_serve_step)
+from repro.serving.pool import (  # noqa: F401
+    DeviceStatePool, PagedStateCache)
 from repro.serving.scheduler import (  # noqa: F401
     Gateway, PrefillStateCache, ServerConfig)
 from repro.serving.loop import (  # noqa: F401
     InjectionServer, ServeResult)
+
+__all__ = [
+    # request-level API (serving/api.py)
+    "Event", "Request", "Response", "RequestTelemetry", "Ticket",
+    "GatewayStats", "RolloverStats", "as_event", "hash_arm", "assign_arms",
+    # engine (serving/engine.py)
+    "ServingConfig", "ServingEngine", "make_serve_step",
+    # paged device state pool (serving/pool.py)
+    "DeviceStatePool", "PagedStateCache",
+    # scheduler / facade (serving/scheduler.py)
+    "Gateway", "ServerConfig", "PrefillStateCache",
+    # deprecated wave shim (serving/loop.py)
+    "InjectionServer", "ServeResult",
+]

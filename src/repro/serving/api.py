@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -161,6 +161,62 @@ class Ticket:
         state = "done" if self.done else "pending"
         return (f"Ticket(id={self.request_id}, user={self.request.user}, "
                 f"{state})")
+
+
+# ----------------------------------------------------------------------
+# Typed gateway telemetry aggregates
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RolloverStats:
+    """Generation-rollover telemetry: warm-handoff and incremental-build
+    counters (see scheduler docstring, "Generation rollover")."""
+    rollovers: int            # generation rolls the gateway handed across
+    rekeyed: int              # entries renamed to the new generation
+    invalidated: int          # entries purged (changed users/stale gens)
+    rebuilt: int              # users re-prefilled by warm_step
+    build_steps: int          # incremental snapshot-build slices run
+    build_time_s: float       # wall time spent in completed builds
+    pending_build_users: int  # users left in the in-flight build
+    pending_rewarm: int       # invalidated users still queued for re-warm
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def __getitem__(self, key: str) -> Any:
+        # migration shim for dict-era callers (stats()["rollover"]["rekeyed"])
+        return getattr(self, key)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayStats:
+    """The typed ``Gateway.stats()`` snapshot.
+
+    Frozen and directly comparable (the sharded-equivalence check
+    asserts single-device == mesh stats by ``==``). ``paths`` and
+    ``queue_delay`` stay plain dicts — they are aggregate views the
+    bench suites serialize as-is. ``__getitem__`` keeps dict-era
+    ``stats()["key"]`` callers working; new code should use attributes,
+    and anything that needs JSON should call :meth:`as_dict`.
+    """
+    requests: int
+    panes: int
+    pending: int              # queued, not yet served
+    completed: int            # served, not yet claimed by poll()/drain()
+    prefill_calls: int
+    inject_calls: int
+    decode_steps: int
+    deadline_flushes: int
+    paths: Dict[str, int]     # "prefill" / "inject" / "cached" row counts
+    queue_delay: Dict[str, float]  # window/p50/p99/max over recent requests
+    rollover: RolloverStats
+    cache: Dict[str, int]     # PrefillStateCache / PagedStateCache counters
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)  # recurses into RolloverStats
+
+    def __getitem__(self, key: str) -> Any:
+        return getattr(self, key)
 
 
 # ----------------------------------------------------------------------

@@ -125,6 +125,24 @@ class ServingEngine:
             out_shardings=(lg_ns, ring_ns), donate_argnums=(1,))
 
     # ------------------------------------------------------------------
+    def prefill_state_shapes(self) -> Tuple[Any, Any]:
+        """Abstract ``(logits, caches)`` of one prefill pane — the shapes
+        and dtypes ``prefill`` would return for a ``(max_batch,
+        prefill_len)`` call — derived via ``jax.eval_shape`` without
+        running (or even compiling) the model. The paged state pool
+        (serving/pool.py) sizes its slot buffers from this, so pool
+        preallocation can never drift from what prefill actually
+        produces."""
+        b, p = self.scfg.max_batch, self.scfg.prefill_len
+        pf = functools.partial(_prefill_impl, cfg=self.cfg,
+                               q_chunk=self.scfg.q_chunk)
+        pshapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
+        return jax.eval_shape(pf, pshapes,
+                              jax.ShapeDtypeStruct((b, p), jnp.int32),
+                              jax.ShapeDtypeStruct((b, p), jnp.bool_))
+
+    # ------------------------------------------------------------------
     def pad_tokens(self, seqs, length: int, align: str = "right",
                    ) -> Tuple[np.ndarray, np.ndarray]:
         """Pad a list of variable-length token lists into (tokens, valid)

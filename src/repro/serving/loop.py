@@ -31,12 +31,12 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Dict, Sequence
+from typing import Sequence
 
 import numpy as np
 
 from repro.core.injection import FeatureInjector
-from repro.serving.api import Request
+from repro.serving.api import GatewayStats, Request
 from repro.serving.engine import ServingEngine
 from repro.serving.scheduler import (  # noqa: F401  (re-exported: the
     Gateway, PrefillStateCache, ServerConfig)        # pre-Gateway public
@@ -142,5 +142,5 @@ class InjectionServer:
             cache_misses=gw.cache.misses - miss0)
 
     # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, Any]:
+    def stats(self) -> GatewayStats:
         return self.gateway.stats()

@@ -23,6 +23,33 @@ pure-hit panes ahead of miss rows (stable order otherwise), so one cold
 row cannot drag a pane of hits onto the prefill path. Rows are
 independent, so regrouping never changes any row's result.
 
+**Continuous batching** (``ServerConfig.max_wait``). Wave semantics
+make a trickle arrival wait for its pane to fill (or for a deadline):
+at one arrival per sim-second and ``max_batch=16`` the last-served row
+has waited 15 seconds before the pane even forms. With ``max_wait``
+set, a queued request is served once it has waited that long —
+``max_wait=0`` admits every arrival immediately in a padded partial
+pane — while a backlogged queue (``submit_many``, or arrivals faster
+than service) still forms full panes first, so the scheduler degrades
+to wave behavior exactly when utilization matters. Rows are
+independent, so any grouping serves bitwise-identical results; the
+knob only trades pane occupancy against queue delay. Completed tickets
+stream out through :meth:`Gateway.poll` / :meth:`Gateway.drain` as
+their rows retire — callers are no longer forced through wave-shaped
+``flush()``.
+
+**The paged state pool** (``ServerConfig.pool_slots``). By default
+per-user prefill states live in a host-numpy LRU and every pane is
+re-assembled with host concats (one host->device transfer per pane).
+With ``pool_slots`` set, states live in a preallocated device-resident
+slot pool (serving/pool.py): pane assembly is a one-hot slot gather
+and admission writeback a one-hot scatter, both inside jit and both
+collective-free on a mesh. The slot table (:class:`PagedStateCache`)
+keeps the host LRU's exact key/counter/rekey surface, so the PR 5 warm
+handoff composes unchanged — a generation rekey renames table keys and
+never touches device arrays. Both backends serve bitwise-identical
+slates (tests/test_state_pool.py).
+
 **Mixed-policy panes.** Per-request ``policy`` resolves at
 feature-assembly time, so control ("batch"), treatment ("inject") and
 oracle ("fresh") rows coexist in one pane: batch/inject rows share the
@@ -68,8 +95,9 @@ import numpy as np
 
 from repro.core.injection import FeatureInjector
 from repro.core.pipeline import items_to_tokens
-from repro.serving.api import (POLICIES, Request, RequestTelemetry,
-                               Response, Ticket, as_event)
+from repro.serving.api import (POLICIES, GatewayStats, Request,
+                               RequestTelemetry, Response, RolloverStats,
+                               Ticket, as_event)
 from repro.serving.engine import ServingEngine
 
 
@@ -242,6 +270,17 @@ class ServerConfig:
     invalidated (changed) users per ``tick`` after a rollover, so the
     miss storm drains between panes instead of on live requests (0 =
     off; ``warm_step()`` can also be driven explicitly).
+
+    **Continuous batching / the paged pool.** ``max_wait`` bounds how
+    long a queued request may wait (in request-clock units) before it
+    is served in a padded partial pane — ``0`` serves every arrival the
+    moment it lands, ``None`` keeps wave semantics (pane-full /
+    deadline / explicit flush only). ``pool_slots`` moves the
+    prefill-state cache from the host LRU to the device-resident slot
+    pool (serving/pool.py; must be >= the engine's ``max_batch``, and
+    it supersedes ``cache_entries``/``cache_bytes`` — a fixed pool IS
+    both budgets). The two knobs are independent: a pooled gateway can
+    run wave-style and a continuous one can run on the host LRU.
     """
     slate_len: int = 4            # items decoded per request (default)
     cache_entries: int = 4096     # LRU budget (user-generation states)
@@ -251,6 +290,8 @@ class ServerConfig:
     warm_handoff: bool = True     # rekey unchanged rows across rollover
     snapshot_build_budget: Optional[int] = None  # users per build step
     rewarm_budget: int = 0        # users re-prefilled per tick post-roll
+    pool_slots: Optional[int] = None  # device state-pool slots (None = host LRU)
+    max_wait: Optional[int] = None    # serve a request after waiting this long
 
     def __post_init__(self):
         if self.snapshot_build_budget is not None \
@@ -275,6 +316,15 @@ class ServerConfig:
             raise ValueError(
                 f"cache_bytes must be >= 1 when set (None disables the "
                 f"byte budget), got {self.cache_bytes}")
+        if self.pool_slots is not None and self.pool_slots < 1:
+            raise ValueError(
+                f"pool_slots must be >= 1 when set (None keeps the host "
+                f"LRU), got {self.pool_slots}")
+        if self.max_wait is not None and self.max_wait < 0:
+            raise ValueError(
+                f"max_wait must be >= 0 when set (0 serves every arrival "
+                f"immediately; None keeps wave semantics), got "
+                f"{self.max_wait}")
 
 
 # ----------------------------------------------------------------------
@@ -306,12 +356,20 @@ class Gateway:
         self.engine = engine
         self.injector = injector
         self.cfg = cfg
-        self.cache = PrefillStateCache(cfg.cache_entries,
-                                       byte_budget=cfg.cache_bytes,
-                                       shards=engine.data_shards)
+        if cfg.pool_slots is not None:
+            from repro.serving.pool import DeviceStatePool, PagedStateCache
+            self.pool: Optional["DeviceStatePool"] = DeviceStatePool(
+                engine, cfg.pool_slots)
+            self.cache = PagedStateCache(self.pool)
+        else:
+            self.pool = None
+            self.cache = PrefillStateCache(cfg.cache_entries,
+                                           byte_budget=cfg.cache_bytes,
+                                           shards=engine.data_shards)
         self._gen = None  # generation the cache was last validated against
         self._clock: Optional[int] = None
         self._queue: List[Ticket] = []
+        self._completed: deque = deque()  # served, unclaimed by poll()
         self._next_id = 0
         # incremental daily job (snapshot_build_budget mode)
         self._builder = None          # in-flight SnapshotBuilder, or None
@@ -529,6 +587,8 @@ class Gateway:
         if self._deadline_due():
             self._deadline_flushes += 1
             served = self._drain(full_panes_only=False)
+        elif self._wait_exceeded():
+            served = self._drain(full_panes_only=False)
         if self.cfg.rewarm_budget:
             self.warm_step(self.cfg.rewarm_budget)
         return served
@@ -592,6 +652,26 @@ class Gateway:
         self._advance(now)
         return self._drain(full_panes_only=False)
 
+    def poll(self) -> List[Ticket]:
+        """Claim every ticket whose row has retired since the last
+        ``poll``/``drain`` — the streaming half of the completion API.
+        Never blocks and never serves; pair it with ``submit`` (+
+        ``tick`` to advance the clock) for a caller loop that consumes
+        responses as rows retire instead of holding wave-shaped ticket
+        lists. Tickets stay claimable exactly once."""
+        out = list(self._completed)
+        self._completed.clear()
+        return out
+
+    def drain(self, deadline: Optional[int] = None) -> List[Ticket]:
+        """Advance the clock to ``deadline`` (when given), serve
+        everything still queued (last pane padded if short), and claim
+        completions: returns every ticket finished since the last
+        ``poll``/``drain`` — the just-served queue plus anything an
+        earlier pane-full or deadline flush already retired."""
+        self.flush(deadline)
+        return self.poll()
+
     def _deadline_due(self) -> bool:
         if self._clock is None:
             return False
@@ -599,12 +679,27 @@ class Gateway:
                    and t.request.deadline <= self._clock
                    for t in self._queue)
 
+    def _wait_exceeded(self) -> bool:
+        """Continuous admission: some queued request has waited
+        ``max_wait`` request-clock units (always true for ``max_wait=0``
+        with anything queued)."""
+        mw = self.cfg.max_wait
+        if mw is None or self._clock is None or not self._queue:
+            return False
+        return any(self._clock - t.request.now >= mw for t in self._queue)
+
     def _maybe_flush(self) -> None:
         """The one flush-trigger policy for every enqueue path: a due
-        deadline drains everything (padded short pane); otherwise a full
-        pane's worth of queued requests drains eagerly."""
+        deadline drains everything (padded short pane); a request past
+        the continuous-mode ``max_wait`` likewise drains everything —
+        the queue it drains is whatever is known at that moment, so a
+        ``submit_many`` wave still forms full panes while per-arrival
+        ``submit`` serves immediately; otherwise a full pane's worth of
+        queued requests drains eagerly."""
         if self._deadline_due():
             self._deadline_flushes += 1
+            self._drain(full_panes_only=False)
+        elif self._wait_exceeded():
             self._drain(full_panes_only=False)
         elif len(self._queue) >= self.engine.scfg.max_batch:
             self._drain(full_panes_only=True)
@@ -692,24 +787,20 @@ class Gateway:
     def _suffixes(self, reqs: Sequence[Request], policies: Sequence[str],
                   now: int) -> List[List[int]]:
         """Per-row fresh-suffix token lists at the serve clock; only
-        "inject" rows carry one (a single ``fresh_suffix`` call per
-        pane). Capped at inject_len newest events so the cached and
-        full-prefill paths see identical token streams (pad_tokens would
-        otherwise truncate them at different lengths)."""
+        "inject" rows carry one (a single ``fresh_suffix_tokens`` call
+        per pane, capped at inject_len newest events — see its docstring
+        for why truncation happens before tokenization)."""
         out: List[List[int]] = [[] for _ in reqs]
         if self.injector.realtime is None:
             return out
         rows = [i for i, pol in enumerate(policies) if pol == "inject"]
         if not rows:
             return out
-        cap = self.engine.scfg.inject_len
         users = np.asarray([reqs[i].user for i in rows], np.int64)
-        sfx = self.injector.fresh_suffix(users, now)
+        sfx = self.injector.fresh_suffix_tokens(
+            users, now, cap=self.engine.scfg.inject_len)
         for j, i in enumerate(rows):
-            evs = sfx[j][-cap:]
-            out[i] = items_to_tokens(
-                np.asarray([item for item, _ in evs], np.int64),
-                np.ones(len(evs), np.int64)).tolist()
+            out[i] = sfx[j]
         return out
 
     # ------------------------------------------------------------------
@@ -732,22 +823,33 @@ class Gateway:
             # one prefill of history[-prefill_len:] + suffix per row —
             # truncating BEFORE the append keeps this path's token
             # streams identical to the cached path's prefill pane even
-            # when the feature history is longer than prefill_len.
+            # when the feature history is longer than prefill_len. A
+            # suffix-free pane pads to prefill_len exactly: that puts
+            # its rows at the same right-aligned RoPE offsets as the
+            # cacheable path's prefill pane, so a row's scores don't
+            # depend on which pane composition served it (the
+            # continuous scheduler's partial panes must be bitwise
+            # equal to the wave path's mixed panes).
             hists = self._histories(reqs, policies, now)
             p = eng.scfg.prefill_len
             streams = [h[-p:] + s for h, s in zip(hists, suffix)]
-            toks, valid = eng.pad_tokens(streams, p + eng.scfg.inject_len)
+            buf = p + (eng.scfg.inject_len if any(suffix) else 0)
+            toks, valid = eng.pad_tokens(streams, buf)
             state = eng.prefill(toks, valid)
             self.prefill_calls += 1
             first = state["logits"][:, -1]
             hit_flags = [False] * len(reqs)
             paths = ["prefill"] * len(reqs)
         else:
-            entries, hit_flags = self._lookup_or_admit(reqs, policies,
-                                                       cacheable, gen, now)
-            state = _cat_rows(entries, eng.scfg.max_batch)
-            last = np.stack([e["last_logits"] for e in _pad_list(
-                entries, eng.scfg.max_batch)])
+            if self.pool is not None:
+                state, last, hit_flags = self._assemble_pool(
+                    reqs, policies, cacheable, gen, now)
+            else:
+                entries, hit_flags = self._lookup_or_admit(
+                    reqs, policies, cacheable, gen, now)
+                state = _cat_rows(entries, eng.scfg.max_batch)
+                last = np.stack([e["last_logits"] for e in _pad_list(
+                    entries, eng.scfg.max_batch)])
             if any(suffix):
                 stoks, svalid = eng.pad_tokens(suffix, eng.scfg.inject_len,
                                                align="left")
@@ -782,6 +884,7 @@ class Gateway:
                                   scores=scores[i].copy(), telemetry=tel)
             self._path_counts[paths[i]] += 1
             self._queue_delays.append(tel.queue_delay)
+        self._completed.extend(pane)  # rows retire -> claimable via poll()
         self.requests += len(pane)
 
     def _decode(self, state: Dict[str, Any], first_logits,
@@ -867,6 +970,85 @@ class Gateway:
                 entries[key] = entry
         return [entries[k] for k in keys], hit_flags
 
+    def _assemble_pool(self, reqs: Sequence[Request],
+                       policies: Sequence[str],
+                       cacheable: Sequence[bool], gen: int, now: int,
+                       gather: bool = True,
+                       ) -> Tuple[Optional[Dict[str, Any]], Any, List[bool]]:
+        """Pooled twin of ``_lookup_or_admit`` + ``_cat_rows``: per-row
+        slot resolution, one fixed-shape prefill for all misses
+        scattered straight into pool slots, then a one-hot gather
+        assembling the pane on device — no state ever visits the host.
+
+        Probe/admission order, dedup, and the ephemeral treatment of
+        uncacheable rows mirror the host path exactly (the two backends
+        must stay bitwise-equal and counter-identical). Slots touched by
+        this pane — hits and fresh admissions — are *pinned* so
+        slot-pressure eviction during admission can never free a slot
+        the pane is about to read; scratch slots of ephemeral rows
+        return to the free list once the pane is assembled. With
+        ``gather=False`` (the warming path) admission happens but no
+        pane is assembled."""
+        eng = self.engine
+        cache = self.cache  # PagedStateCache
+        slot_of: Dict[Any, int] = {}
+        hit_flags: List[bool] = []
+        keys: List[Any] = []
+        miss_seen = set()
+        miss_keys: List[Any] = []
+        miss_rows: List[int] = []
+        for i, (req, pol, can) in enumerate(zip(reqs, policies, cacheable)):
+            if can:
+                key = req.user
+                s = cache.lookup(req.user, gen)
+                if s is None:
+                    if key not in miss_seen:
+                        miss_seen.add(key)
+                        miss_keys.append(key)
+                        miss_rows.append(i)
+                    hit_flags.append(False)
+                else:
+                    slot_of[key] = s
+                    hit_flags.append(True)
+            else:
+                key = (req.user, pol, "ephemeral")
+                if key not in miss_seen:
+                    miss_seen.add(key)
+                    miss_keys.append(key)
+                    miss_rows.append(i)
+                hit_flags.append(False)
+            keys.append(key)
+        pinned = set(slot_of.values())
+        scratch: List[int] = []
+        if miss_rows:
+            hists = self._histories([reqs[i] for i in miss_rows],
+                                    [policies[i] for i in miss_rows], now)
+            toks, valid = eng.pad_tokens(hists, eng.scfg.prefill_len)
+            state = eng.prefill(toks, valid)
+            self.prefill_calls += 1
+            for key, i in zip(miss_keys, miss_rows):
+                if cacheable[i]:
+                    s = cache.admit(reqs[i].user, gen, pinned)
+                else:
+                    s = cache.alloc_scratch(pinned)
+                    scratch.append(s)
+                pinned.add(s)
+                slot_of[key] = s
+            self.pool.scatter(state, [slot_of[k] for k in miss_keys])
+        if not gather:
+            for s in scratch:
+                cache.free_scratch(s)
+            return None, None, hit_flags
+        row_slots = [slot_of[k] for k in keys]
+        # pad short panes by repeating row 0's slot — same padding rows
+        # (and therefore bitwise the same pane) as the host path's
+        # _pad_list; padding is discarded after decode
+        row_slots += [row_slots[0]] * (eng.scfg.max_batch - len(row_slots))
+        pane, last = self.pool.gather(row_slots)
+        for s in scratch:
+            cache.free_scratch(s)
+        return pane, last, hit_flags
+
     # ------------------------------------------------------------------
     # Warming
     # ------------------------------------------------------------------
@@ -887,8 +1069,13 @@ class Gateway:
             pane = [Request(user=int(u), now=int(now))
                     for u in users[lo:lo + b]]
             before = self.cache.misses
-            self._lookup_or_admit(pane, [pol] * len(pane),
-                                  [True] * len(pane), gen, int(now))
+            if self.pool is not None:
+                self._assemble_pool(pane, [pol] * len(pane),
+                                    [True] * len(pane), gen, int(now),
+                                    gather=False)
+            else:
+                self._lookup_or_admit(pane, [pol] * len(pane),
+                                      [True] * len(pane), gen, int(now))
             warmed += self.cache.misses - before
             if self.cache.evictions > ev0:
                 return warmed, True
@@ -944,31 +1131,35 @@ class Gateway:
         return warmed
 
     # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, Any]:
-        """Counters + aggregated request telemetry."""
+    def stats(self) -> GatewayStats:
+        """Counters + aggregated request telemetry as a typed frozen
+        :class:`~repro.serving.api.GatewayStats` (``.as_dict()`` for the
+        JSON view; ``["key"]`` indexing still works for dict-era
+        callers)."""
         delays = np.asarray(self._queue_delays, np.int64)
-        return {
-            "requests": self.requests, "panes": self.panes,
-            "pending": len(self._queue),
-            "prefill_calls": self.prefill_calls,
-            "inject_calls": self.inject_calls,
-            "decode_steps": self.decode_steps,
-            "deadline_flushes": self._deadline_flushes,
-            "paths": dict(self._path_counts),
-            "queue_delay": {
+        return GatewayStats(
+            requests=self.requests, panes=self.panes,
+            pending=len(self._queue),
+            completed=len(self._completed),
+            prefill_calls=self.prefill_calls,
+            inject_calls=self.inject_calls,
+            decode_steps=self.decode_steps,
+            deadline_flushes=self._deadline_flushes,
+            paths=dict(self._path_counts),
+            queue_delay={
                 "window": int(len(delays)),
                 "p50": float(np.percentile(delays, 50)) if len(delays) else 0.0,
                 "p99": float(np.percentile(delays, 99)) if len(delays) else 0.0,
                 "max": int(delays.max()) if len(delays) else 0,
             },
-            "rollover": {
+            rollover=RolloverStats(
                 **self._rollover,
-                "pending_build_users": (self._builder.remaining
-                                        if self._builder is not None else 0),
-                "pending_rewarm": len(self._rewarm_queue),
-            },
-            "cache": self.cache.stats(),
-        }
+                pending_build_users=(self._builder.remaining
+                                     if self._builder is not None else 0),
+                pending_rewarm=len(self._rewarm_queue),
+            ),
+            cache=self.cache.stats(),
+        )
 
 
 # ----------------------------------------------------------------------

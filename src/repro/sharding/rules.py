@@ -284,6 +284,50 @@ def seq_cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
 
 
 @dataclasses.dataclass(frozen=True)
+class SlotPoolShardings:
+    """PartitionSpecs for the paged prefill-state pool (serving/pool.py)."""
+    caches: Any          # pytree of P matching seq-form caches, slot axis 1
+    valid: P             # (n_slots, S)
+    rows: P              # (n_slots,)
+    logits: P            # (n_slots, Vp)
+
+
+def slot_pool_pspecs(cfg: ModelConfig, mesh: Mesh) -> SlotPoolShardings:
+    """Sharding bundle for the device-resident slot pool.
+
+    The pool's **slot axis** (axis 1 of every cache leaf, axis 0 of the
+    valid/next_pos/last_logits planes) is deliberately REPLICATED over
+    the data axes, never sharded: pane assembly is a one-hot einsum that
+    *contracts over slots*, and a slot-sharded operand would turn every
+    gather into a cross-shard partial-sum (all-reduce). With the pool
+    replicated and the gathered pane batch-sharded, GSPMD partitions the
+    contraction by output rows — each data shard reads its pane rows
+    from its local pool copy with **zero collectives** (asserted from
+    HLO by tools/slot_pool_check.py). Model-axis (TP) dims shard exactly
+    as :func:`seq_cache_pspecs`, so gathered panes land in the layout
+    ``inject``/``finalize`` consume without resharding.
+    """
+    from repro.models.model import pattern_sig
+    r = ShardingRules.make(cfg, mesh, decode=True)
+    hd_tp = r.tpa(cfg.head_dim_) if not _div(cfg.n_kv_heads, r.tp_size) else None
+    kv_tp = r.tp if _div(cfg.n_kv_heads, r.tp_size) else None
+    out = {}
+    for p, (kind, _) in enumerate(pattern_sig(cfg)):
+        if kind == "attn":
+            kv = P(None, None, None, kv_tp, hd_tp)
+            out[f"pos{p}"] = {"k": kv, "v": kv}
+        else:
+            out[f"pos{p}"] = {
+                "conv_x": P(None, None, None, r.tpa(cfg.d_inner)),
+                "conv_B": P(None, None, None, None),
+                "conv_C": P(None, None, None, None),
+                "state": P(None, None, r.tpa(cfg.n_ssm_heads), None, None),
+            }
+    return SlotPoolShardings(caches=out, valid=P(None, None),
+                             rows=P(None), logits=P(None, None))
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingShardings:
     """Every PartitionSpec the serving engine needs, resolved once.
 

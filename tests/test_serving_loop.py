@@ -1,4 +1,4 @@
-"""End-to-end injection serving loop: cache correctness under interleaved
+"""End-to-end injection serving: cache correctness under interleaved
 ingest/serve traffic.
 
 The load-bearing invariant: the prefill-state cache is an *optimization
@@ -6,7 +6,14 @@ only* — for any request stream, the cached-inject path must produce the
 same scores/slates as full-prefill-per-request, including across LRU
 eviction and snapshot-generation rollover (stale cached state must never
 serve).
+
+These tests drive the Gateway's submit/poll surface directly (the wave
+shape is just ``submit_many`` + ``drain``); the deprecated
+``InjectionServer.serve()`` shim is exercised only by the dedicated
+shim-boundary test at the bottom.
 """
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -17,8 +24,10 @@ from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
 from repro.core.injection import FeatureInjector, InjectionConfig
 from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
 from repro.models.model import init_params
+from repro.serving.api import Request
 from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.loop import InjectionServer, PrefillStateCache, ServerConfig
+from repro.serving.scheduler import Gateway
 
 DAY = 86400
 N_USERS, N_ITEMS = 40, 300
@@ -39,8 +48,7 @@ def _seed_events(seed=0, n=1500, t_hi=5 * DAY):
             rng.randint(0, t_hi, n))
 
 
-def _server(policy="inject", use_cache=True, cache_entries=256,
-            snapshot_offset=0, events=None, slate_len=3):
+def _injector(policy="inject", snapshot_offset=0, events=None):
     store = BatchFeatureStore(FeatureStoreConfig(
         n_users=N_USERS, feature_len=FEATURE_LEN,
         snapshot_offset=snapshot_offset))
@@ -49,17 +57,46 @@ def _server(policy="inject", use_cache=True, cache_entries=256,
     for u, i, t in zip(*(events or _seed_events())):
         store.append(int(u), int(i), int(t))
         rts.ingest(int(u), int(i), int(t))
-    inj = FeatureInjector(
+    return FeatureInjector(
         InjectionConfig(policy=policy, feature_len=FEATURE_LEN), store, rts)
-    return InjectionServer(_ENGINE, inj, ServerConfig(
-        slate_len=slate_len, cache_entries=cache_entries,
-        use_cache=use_cache))
 
 
-def _ingest(srv, users, items, ts):
+def _server(policy="inject", use_cache=True, cache_entries=256,
+            snapshot_offset=0, events=None, slate_len=3):
+    return Gateway(_ENGINE, _injector(policy, snapshot_offset, events),
+                   ServerConfig(slate_len=slate_len,
+                                cache_entries=cache_entries,
+                                use_cache=use_cache))
+
+
+def _ingest(gw, users, items, ts):
     for u, i, t in zip(users, items, ts):
-        srv.injector.batch.append(int(u), int(i), int(t))
-        srv.injector.realtime.ingest(int(u), int(i), int(t))
+        gw.observe((int(u), int(i), int(t)))
+
+
+@dataclasses.dataclass
+class _Wave:
+    scores: np.ndarray
+    slate: np.ndarray
+    cache_hits: int
+    cache_misses: int
+
+
+def _serve(gw: Gateway, users, now) -> _Wave:
+    """One wave on the streaming surface: submit_many + drain, results
+    claimed via poll() (inside drain) in submission order."""
+    users = np.asarray(users, np.int64).ravel()
+    h0, m0 = gw.cache.hits, gw.cache.misses
+    tickets = gw.submit_many(
+        [Request(user=int(u), now=int(now)) for u in users])
+    done = {t.request_id: t for t in gw.drain(now)}
+    assert all(t.request_id in done and t.done for t in tickets)
+    if not len(users):
+        return _Wave(np.zeros((0, gw.engine.cfg.vocab_padded), np.float32),
+                     np.zeros((0, gw.cfg.slate_len), np.int32), 0, 0)
+    return _Wave(np.stack([t.response.scores for t in tickets]),
+                 np.stack([t.response.slate for t in tickets]),
+                 gw.cache.hits - h0, gw.cache.misses - m0)
 
 
 # ----------------------------------------------------------------------
@@ -77,8 +114,8 @@ def test_cached_equals_full_prefill_interleaved():
         _ingest(cached, u, it, t)
         _ingest(full, u, it, t)
         q = rng.randint(0, N_USERS, 11)  # pane-splits at max_batch=4
-        rc = cached.serve(q, now)
-        rf = full.serve(q, now)
+        rc = _serve(cached, q, now)
+        rf = _serve(full, q, now)
         np.testing.assert_allclose(rc.scores, rf.scores, atol=2e-3, rtol=2e-3)
         np.testing.assert_array_equal(rc.slate, rf.slate)
         now += 300
@@ -89,9 +126,9 @@ def test_cache_hits_skip_prefill():
     srv = _server()
     now = 5 * DAY + 100
     users = np.arange(8)
-    srv.serve(users, now)
+    _serve(srv, users, now)
     n_prefills = srv.prefill_calls
-    r = srv.serve(users, now + 10)
+    r = _serve(srv, users, now + 10)
     assert srv.prefill_calls == n_prefills  # no new prefill on the hot path
     assert r.cache_hits == 8 and r.cache_misses == 0
 
@@ -104,8 +141,8 @@ def test_lru_eviction_stays_correct():
     now = 5 * DAY + 100
     for lo in (0, 8, 16, 0):  # revisit evicted users
         q = np.arange(lo, lo + 8) % N_USERS
-        rc = srv.serve(q, now)
-        rf = full.serve(q, now)
+        rc = _serve(srv, q, now)
+        rf = _serve(full, q, now)
         np.testing.assert_allclose(rc.scores, rf.scores, atol=2e-3, rtol=2e-3)
     assert srv.cache.evictions > 0
     assert len(srv.cache) <= 6
@@ -118,12 +155,12 @@ def test_batch_policy_ignores_fresh_events():
     b_srv, i_srv = _server(policy="batch"), _server(policy="inject")
     now = 5 * DAY + 100
     users = np.arange(6)
-    sb0 = b_srv.serve(users, now).scores
-    si0 = i_srv.serve(users, now).scores
+    sb0 = _serve(b_srv, users, now).scores
+    si0 = _serve(i_srv, users, now).scores
     _ingest(b_srv, users, (users + 7) % N_ITEMS, np.full(6, now + 5))
     _ingest(i_srv, users, (users + 7) % N_ITEMS, np.full(6, now + 5))
-    sb1 = b_srv.serve(users, now + 50).scores
-    si1 = i_srv.serve(users, now + 50).scores
+    sb1 = _serve(b_srv, users, now + 50).scores
+    si1 = _serve(i_srv, users, now + 50).scores
     np.testing.assert_allclose(sb0, sb1, atol=1e-5)
     assert np.abs(si0 - si1).max() > 1e-3
 
@@ -131,8 +168,8 @@ def test_batch_policy_ignores_fresh_events():
 def test_fresh_policy_never_caches():
     srv = _server(policy="fresh")
     now = 5 * DAY + 100
-    srv.serve(np.arange(4), now)
-    srv.serve(np.arange(4), now + 10)
+    _serve(srv, np.arange(4), now)
+    _serve(srv, np.arange(4), now + 10)
     assert srv.cache.hits == 0 and len(srv.cache) == 0
     assert srv.prefill_calls == 2
 
@@ -145,9 +182,9 @@ def test_warm_precomputes_prefill_states():
     users = np.arange(12)
     n = warmed.warm(users, now)
     assert n == 12 and len(warmed.cache) == 12
-    r_warm = warmed.serve(users, now)
+    r_warm = _serve(warmed, users, now)
     assert r_warm.cache_hits == 12 and r_warm.cache_misses == 0
-    r_cold = cold.serve(users, now)
+    r_cold = _serve(cold, users, now)
     np.testing.assert_allclose(r_warm.scores, r_cold.scores,
                                atol=2e-3, rtol=2e-3)
     # warm is a no-op for uncacheable configurations
@@ -172,8 +209,7 @@ def test_history_longer_than_prefill_len_paths_agree():
         max_batch=4, prefill_len=16, inject_len=8, cache_capacity=64))
 
     def srv_with(use_cache):
-        s = _server(use_cache=use_cache)
-        return InjectionServer(eng, s.injector, ServerConfig(
+        return Gateway(eng, _injector(), ServerConfig(
             slate_len=3, cache_entries=64, use_cache=use_cache))
 
     cached, full = srv_with(True), srv_with(False)
@@ -181,7 +217,7 @@ def test_history_longer_than_prefill_len_paths_agree():
     users = np.arange(8)  # FEATURE_LEN=24 history > prefill_len=16
     _ingest(cached, users, (users + 3) % N_ITEMS, np.full(8, now - 20))
     _ingest(full, users, (users + 3) % N_ITEMS, np.full(8, now - 20))
-    rc, rf = cached.serve(users, now), full.serve(users, now)
+    rc, rf = _serve(cached, users, now), _serve(full, users, now)
     np.testing.assert_allclose(rc.scores, rf.scores, atol=2e-3, rtol=2e-3)
     np.testing.assert_array_equal(rc.slate, rf.slate)
 
@@ -191,24 +227,24 @@ def test_duplicate_users_count_per_row():
     repeats a user; the repeated miss still pays only one admission."""
     srv = _server()
     now = 5 * DAY + 100
-    r = srv.serve(np.array([5, 5, 5]), now)
+    r = _serve(srv, np.array([5, 5, 5]), now)
     assert r.cache_misses == 3 and r.cache_hits == 0
     assert srv.prefill_calls == 1  # one admission, not three
-    r = srv.serve(np.array([5, 5]), now + 10)
+    r = _serve(srv, np.array([5, 5]), now + 10)
     assert r.cache_hits == 2 and r.cache_misses == 0
 
 
 def test_slate_items_distinct():
     """A slate recommends slate_len distinct items per user."""
     srv = _server(slate_len=4)
-    r = srv.serve(np.arange(8), 5 * DAY + 100)
+    r = _serve(srv, np.arange(8), 5 * DAY + 100)
     for row in r.slate:
         assert len(set(row.tolist())) == len(row)
 
 
 def test_empty_request_wave():
     srv = _server()
-    r = srv.serve(np.array([], np.int64), 5 * DAY)
+    r = _serve(srv, np.array([], np.int64), 5 * DAY)
     assert r.scores.shape == (0, _CFG.vocab_padded)
     assert r.slate.shape == (0, 3)
 
@@ -228,7 +264,7 @@ def test_generation_rollover_invalidates_cache(offset):
     srv = _server(snapshot_offset=offset, events=events)
     users = np.arange(10)
     t1 = 5 * DAY + offset + 100          # inside generation A
-    r1 = srv.serve(users, t1)
+    r1 = _serve(srv, users, t1)
     gen_a = srv.injector.generation(t1)
     assert gen_a == 5 * DAY + offset
     assert r1.cache_misses == 10
@@ -238,7 +274,7 @@ def test_generation_rollover_invalidates_cache(offset):
     _ingest(srv, users, rng.randint(0, N_ITEMS, 10), np.full(10, t1 + 500))
 
     t2 = 6 * DAY + offset + 100          # past the next boundary
-    r2 = srv.serve(users, t2)
+    r2 = _serve(srv, users, t2)
     gen_b = srv.injector.generation(t2)
     assert gen_b == 6 * DAY + offset and gen_b != gen_a
     assert srv.cache.invalidations >= 10  # old generation purged eagerly
@@ -251,7 +287,7 @@ def test_generation_rollover_invalidates_cache(offset):
     oracle = _server(snapshot_offset=offset, events=events, use_cache=False)
     _ingest(oracle, users, np.random.RandomState(9).randint(0, N_ITEMS, 10),
             np.full(10, t1 + 500))
-    ro = oracle.serve(users, t2)
+    ro = _serve(oracle, users, t2)
     np.testing.assert_allclose(r2.scores, ro.scores, atol=2e-3, rtol=2e-3)
     np.testing.assert_array_equal(r2.slate, ro.slate)
 
@@ -264,11 +300,38 @@ def test_stale_state_differs_from_fresh_state():
     srv = _server(events=events)
     users = np.arange(10)
     t1 = 5 * DAY + 100
-    r1 = srv.serve(users, t1)
+    r1 = _serve(srv, users, t1)
     rng = np.random.RandomState(9)
     _ingest(srv, users, rng.randint(0, N_ITEMS, 10), np.full(10, t1 + 500))
-    r2 = srv.serve(users, 6 * DAY + 100)
+    r2 = _serve(srv, users, 6 * DAY + 100)
     assert np.abs(r1.scores - r2.scores).max() > 1e-3
+
+
+# ----------------------------------------------------------------------
+# The deprecated wave shim: bitwise-verified behind its boundary
+# ----------------------------------------------------------------------
+
+def test_legacy_shim_serves_bitwise_and_warns():
+    """InjectionServer.serve() is formally deprecated: it must emit
+    DeprecationWarning and stay a pure repackaging of the Gateway —
+    bitwise-identical slates/scores and identical hit counters to
+    submit_many + drain on an identical stack."""
+    shim = InjectionServer(_ENGINE, _injector(), ServerConfig(
+        slate_len=3, cache_entries=256))
+    gw = _server()
+    rng = np.random.RandomState(3)
+    now = 5 * DAY + 100
+    for wave in range(3):
+        q = rng.randint(0, N_USERS, 9)
+        with pytest.deprecated_call():
+            rs = shim.serve(q, now)
+        rg = _serve(gw, q, now)
+        np.testing.assert_array_equal(rs.slate, rg.slate)
+        np.testing.assert_array_equal(rs.scores, rg.scores)
+        assert (rs.cache_hits, rs.cache_misses) == \
+            (rg.cache_hits, rg.cache_misses)
+        now += 300
+    assert shim.cache.hits == gw.cache.hits > 0
 
 
 # ----------------------------------------------------------------------
@@ -299,3 +362,68 @@ def test_prefill_state_cache_generation_keys():
 def test_prefill_state_cache_rejects_zero_budget():
     with pytest.raises(ValueError):
         PrefillStateCache(budget=0)
+
+
+# ----------------------------------------------------------------------
+# Satellite: byte-accounting drift audit
+# ----------------------------------------------------------------------
+
+def test_byte_accounting_invariant_under_interleaving():
+    """``bytes_per_shard`` is a memoized counter — under any interleaving
+    of put / get / rekey / invalidate / eviction it must equal the sum
+    recomputed from the resident entries (drift would silently break the
+    byte-budget eviction), and the byte budget must hold whenever more
+    than one entry is resident."""
+    rng = np.random.RandomState(0)
+    c = PrefillStateCache(budget=12, byte_budget=48 * 1024, shards=4)
+    gen = 100
+
+    def recomputed():
+        return sum(nb for _, nb in c._entries.values())
+
+    for step in range(600):
+        op = rng.randint(0, 6)
+        user = int(rng.randint(0, 30))
+        if op <= 2:  # puts dominate, including same-key overwrites
+            size = int(rng.randint(1, 6000))
+            c.put(user, gen, {"caches": np.zeros(size, np.float32)})
+        elif op == 3:
+            c.get(user, gen)
+        elif op == 4 and rng.rand() < 0.2:
+            new_gen = gen + DAY
+            changed = rng.randint(0, 30, rng.randint(0, 12))
+            c.rekey_generation(gen, new_gen, changed)
+            gen = new_gen
+        elif op == 5 and rng.rand() < 0.1:
+            c.invalidate_except(gen)
+        assert c.bytes_per_shard == recomputed(), f"drift at step {step}"
+        if len(c._entries) > 1:
+            assert c.bytes_per_shard <= c.byte_budget
+    assert c.evictions > 0 and c.rekeys > 0 and c.invalidations > 0
+    c.invalidate_except(gen - 1)  # drain everything (no entry matches)
+    c.invalidate_except(gen + 1)
+    assert len(c) == 0 and c.bytes_per_shard == 0
+
+
+def test_gateway_byte_accounting_exact_across_rollover_and_rewarm():
+    """The full serving flow — admissions, evictions, a warm-handoff
+    generation roll, budgeted re-warming — keeps the gateway cache's
+    byte counter exactly equal to the recomputed per-entry sum."""
+    gw = _server(cache_entries=8)
+
+    def check():
+        assert gw.cache.bytes_per_shard == \
+            sum(nb for _, nb in gw.cache._entries.values())
+
+    now = 5 * DAY + 100
+    _serve(gw, np.arange(12), now)          # misses + evictions (budget 8)
+    check()
+    assert gw.cache.evictions > 0
+    users = np.arange(6)
+    _ingest(gw, users, (users + 5) % N_ITEMS, np.full(6, now + 200))
+    _serve(gw, np.arange(10), 6 * DAY + 100)  # rollover: rekey + invalidate
+    check()
+    assert gw.cache.rekeys > 0 and gw.cache.invalidations > 0
+    while gw.warm_step(2):                   # budgeted re-warm to empty
+        check()
+    check()

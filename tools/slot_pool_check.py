@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+# ^ MUST precede any jax import (see tools/sharded_equiv_check.py). Run
+# as a subprocess so the forced device count never leaks into the
+# caller's process (conftest.py asserts it doesn't).
+
+"""Slot-pool zero-collective check.
+
+Builds a serving engine + paged state pool on an 8x1 ("data","model")
+CPU mesh, compiles the pool's one-hot **gather** and **scatter**
+programs, and scans their optimized HLO for collective ops
+(all-reduce / all-gather / all-to-all / collective-permute /
+reduce-scatter / collective-broadcast). The pool's slot axis is
+replicated over the data axes precisely so these programs partition
+with NO cross-device communication (sharding/rules.py
+``slot_pool_pspecs``) — this script is the proof, re-run in CI next to
+the bitwise sharded-equivalence check.
+
+Also drives one pooled Gateway pane end-to-end on the mesh (admit ->
+scatter -> gather -> inject -> decode) so the compiled programs it
+scanned are the ones serving actually runs.
+
+  PYTHONPATH=src python tools/slot_pool_check.py
+
+Prints ``SLOT-POOL OK collectives=0`` and exits 0 on success.
+"""
+import re
+import sys
+
+import numpy as np
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-reduce|all-gather|all-to-all|collective-permute|"
+    r"reduce-scatter|collective-broadcast)\b")
+
+
+def count_collectives(compiled) -> int:
+    hlo = compiled.as_text()
+    return len(COLLECTIVE_RE.findall(hlo))
+
+
+def main() -> int:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig
+    from repro.core.feature_store import (BatchFeatureStore,
+                                          FeatureStoreConfig)
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.model import init_params
+    from repro.serving.api import Request
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.scheduler import Gateway, ServerConfig
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    DAY = 86400
+    n_users, n_items = 40, 300
+    cfg = ModelConfig(name="pool-check", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=n_items + 256, rope_theta=1e4,
+                      tie_embeddings=True)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    scfg = ServingConfig(max_batch=8, prefill_len=32, inject_len=8,
+                         cache_capacity=64)
+    mesh = make_serving_mesh(8, 1)
+    eng = ServingEngine(cfg, params, scfg, mesh=mesh)
+
+    store = BatchFeatureStore(FeatureStoreConfig(
+        n_users=n_users, feature_len=24))
+    rts = RealtimeFeatureService(RealtimeConfig(
+        n_users=n_users, buffer_len=8, ingest_latency=0))
+    rng = np.random.RandomState(0)
+    u = rng.randint(0, n_users, 1500)
+    it = rng.randint(0, n_items, 1500)
+    ts = rng.randint(0, 5 * DAY, 1500)
+    store.extend(u, it, ts)
+    rts.extend(u, it, ts)
+    inj = FeatureInjector(InjectionConfig(policy="inject", feature_len=24),
+                          store, rts)
+    gw = Gateway(eng, inj, ServerConfig(slate_len=3, pool_slots=16,
+                                        max_wait=0))
+    pool = gw.pool
+
+    # Serve a couple of continuous arrivals end-to-end first: this
+    # populates/executes the exact jitted gather/scatter the pool owns.
+    now = 5 * DAY + 100
+    for j, user in enumerate([3, 7, 3, 11]):
+        t = gw.submit(Request(user=user, now=now + j))
+        assert t.done, t
+    done = gw.poll()
+    assert len(done) == 4 and gw.cache.hits >= 1, gw.cache.stats()
+    assert pool.gathers == 4 and pool.scatters == 3, (pool.gathers,
+                                                      pool.scatters)
+
+    # Now lower + compile the same jit bodies with the pool's shardings
+    # and scan the partitioned HLO for collectives.
+    sds = lambda x: jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                       sharding=a.sharding), x)
+    oh = jax.ShapeDtypeStruct((scfg.max_batch, pool.n_slots), jnp.float32)
+    gather_c = pool._gather.lower(
+        sds(pool.caches), sds(pool.valid), sds(pool.next_pos),
+        sds(pool.last_logits), oh).compile()
+    p, vp = scfg.prefill_len, cfg.vocab_padded
+    st_logits = jax.ShapeDtypeStruct((scfg.max_batch, p, vp), jnp.float32)
+    scatter_c = pool._scatter.lower(
+        sds(pool.caches), sds(pool.valid), sds(pool.next_pos),
+        sds(pool.last_logits),
+        jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(
+                (a.shape[0], scfg.max_batch) + a.shape[2:], a.dtype),
+            pool.caches),
+        jax.ShapeDtypeStruct((scfg.max_batch, p), jnp.bool_),
+        jax.ShapeDtypeStruct((scfg.max_batch,), jnp.int32),
+        st_logits, oh).compile()
+
+    ng = count_collectives(gather_c)
+    ns = count_collectives(scatter_c)
+    print(f"gather: collectives={ng}  scatter: collectives={ns} "
+          f"(8-way data mesh, {pool.n_slots} slots)")
+    assert ng == 0, f"slot gather compiled with {ng} collectives"
+    assert ns == 0, f"slot scatter compiled with {ns} collectives"
+    print(f"SLOT-POOL OK collectives={ng + ns}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
