@@ -37,6 +37,11 @@ Sections
                      incremental build — boundary stall, post-rollover
                      first-wave prefill storm, miss-storm depth, p99
                      (writes BENCH_rollover.json)
+  scenarios          production traffic regimes (diurnal / flash_crowd /
+                     cold_start_storm / churn_heavy / mixed_fleet) from
+                     the seeded trace generator, each gated on its SLO
+                     contract; flash_crowd proves deadline-aware load
+                     shedding bounds p99 (writes BENCH_scenarios.json)
 """
 from __future__ import annotations
 
@@ -1366,6 +1371,11 @@ def bench_roofline():
               f"({tot[2]/tot[3]:.2f}x)")
 
 
+try:  # python -m benchmarks.run vs python benchmarks/run.py
+    from benchmarks.scenarios import bench_scenarios
+except ImportError:
+    from scenarios import bench_scenarios
+
 SECTIONS = {
     "ab_lift": bench_ab_lift,
     "latency_ablation": bench_latency_ablation,
@@ -1378,6 +1388,7 @@ SECTIONS = {
     "serving_sharded": bench_serving_sharded,
     "scheduler": bench_scheduler,
     "rollover": bench_rollover,
+    "scenarios": bench_scenarios,
 }
 
 
@@ -1396,7 +1407,7 @@ def main() -> None:
         if pick and name != pick:
             continue
         if name in ("feature_plane", "serving", "serving_sharded",
-                    "scheduler", "rollover"):
+                    "scheduler", "rollover", "scenarios"):
             if not pick:  # full-size suites take minutes — run them
                 continue  # explicitly via --suite
             fn(smoke=args.smoke, out_path=args.out)

@@ -1,0 +1,118 @@
+"""The ``scenarios`` suite: production traffic regimes vs SLO contracts.
+
+Runs every named scenario from ``repro.serving.loadgen`` (diurnal /
+flash_crowd / cold_start_storm / churn_heavy / mixed_fleet) end to end
+through the Gateway, gates each on its declared SLO contract, proves
+determinism by replaying one scenario and comparing trace + slate
+fingerprints, and writes BENCH_scenarios[_smoke].json. When
+``GITHUB_STEP_SUMMARY`` is set (CI), appends a markdown pass/fail table.
+
+The committed artifact is the acceptance record for PR 7: steady-state
+scenarios pass their contracts with **zero sheds** (the load-shedder
+must never fire off-overload), while flash_crowd holds its p99
+queue-delay budget *because* it sheds — ``min_shed`` asserts shedding
+actually engaged and ``GatewayStats.shed`` accounts for every rejection.
+
+Sim-time gates (queue delay, shed/miss rates, hit rates) are
+deterministic, so the artifact's pass/fail is machine-independent; the
+wall-clock budgets are deliberately loose (they catch a path suddenly
+paying compile time, not regressions of microseconds).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _summary_lines(rows):
+    """Markdown pass/fail table for the CI job summary."""
+    out = ["### Scenario SLOs", "",
+           "| scenario | arch | requests | shed | hit rate | queue p99 (s) "
+           "| deadline misses | SLO |",
+           "|---|---|---:|---:|---:|---:|---:|---|"]
+    for r in rows:
+        m = r["metrics"]
+        out.append(
+            f"| {r['name']} | {r['arch'] or '-'} | {m['requests']} "
+            f"| {m['shed']} | {m['hit_rate']:.2f} "
+            f"| {m['queue_delay']['p99']:.0f} | {m['deadline_misses']} "
+            f"| {'PASS' if r['slo_pass'] else 'FAIL'} |")
+    return out
+
+
+def bench_scenarios(smoke: bool = False, out_path: str = None):
+    """Run the five scenarios + the determinism replay; write the
+    artifact. Returns the per-(scenario, arch) result rows."""
+    from repro.serving.loadgen import (SCENARIO_NAMES, get_scenario,
+                                       run_scenario)
+
+    print("\n== scenarios (trace-driven load vs SLO contracts) ==")
+    rows = []
+    for name in SCENARIO_NAMES:
+        spec = get_scenario(name, smoke=smoke)
+        t0 = time.perf_counter()
+        results = run_scenario(spec)
+        dt = time.perf_counter() - t0
+        for res in results:
+            r = res.as_dict()
+            r["slo"] = spec.slo.as_dict()
+            r["wall_s"] = round(dt / len(results), 3)
+            rows.append(r)
+            m = res.metrics
+            print(f"  {name:16s} {res.arch or '-':22s} "
+                  f"req={m['requests']:5d} shed={m['shed']:4d} "
+                  f"hit={m['hit_rate']:.2f} "
+                  f"qd p50/p99={m['queue_delay']['p50']:.0f}/"
+                  f"{m['queue_delay']['p99']:.0f}s "
+                  f"miss={m['deadline_misses']:3d} "
+                  f"{'PASS' if res.slo_pass else 'FAIL'}")
+            for g in res.gates:
+                if not g["pass"]:
+                    print(f"    FAILED gate {g['gate']}: "
+                          f"budget={g['budget']} actual={g['actual']}")
+
+    # determinism: the same spec must reproduce the identical op stream
+    # AND the identical served bytes (churn_heavy exercises the rollover
+    # path, the strongest determinism claim)
+    spec = get_scenario("churn_heavy", smoke=smoke)
+    a = run_scenario(spec, warmup=False)[0]
+    b = run_scenario(spec, warmup=False)[0]
+    determinism = {
+        "scenario": "churn_heavy",
+        "trace_fingerprints": [a.trace_fingerprint, b.trace_fingerprint],
+        "slate_fingerprints": [a.slate_fingerprint, b.slate_fingerprint],
+        "reproducible": (a.trace_fingerprint == b.trace_fingerprint
+                         and a.slate_fingerprint == b.slate_fingerprint),
+    }
+    print(f"  determinism(churn_heavy): trace {a.trace_fingerprint} "
+          f"slates {a.slate_fingerprint} "
+          f"{'REPRODUCED' if determinism['reproducible'] else 'DIVERGED'}")
+    assert determinism["reproducible"], \
+        "same seed must reproduce identical trace and slates"
+
+    n_fail = sum(not r["slo_pass"] for r in rows)
+    print(f"  {len(rows)} scenario runs, {n_fail} SLO failures")
+
+    if out_path is None:
+        out_path = "BENCH_scenarios_smoke.json" if smoke \
+            else "BENCH_scenarios.json"
+    with open(out_path, "w") as f:
+        json.dump({"suite": "scenarios", "smoke": smoke,
+                   "config": {"scenarios": list(SCENARIO_NAMES)},
+                   "determinism": determinism,
+                   "results": rows}, f, indent=2)
+    print(f"  wrote {os.path.abspath(out_path)}")
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("\n".join(_summary_lines(rows)) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    bench_scenarios(smoke="--smoke" in sys.argv)

@@ -176,9 +176,42 @@ def run_loop(cfg, params, args, mesh=None) -> None:
     print(f"stats: {st.as_dict()}")
 
 
+def run_scenario_cli(args) -> None:
+    """--scenario NAME: replay one named production traffic scenario
+    (serving/loadgen.py) against the chosen arch and print the SLO
+    scorecard. mixed_fleet keeps its own multi-arch roster; every other
+    scenario runs on a reduced variant of ``--arch``."""
+    import dataclasses
+
+    from repro.serving.loadgen import get_scenario, run_scenario
+
+    spec = get_scenario(args.scenario, smoke=args.smoke)
+    if args.arch and not spec.archs:
+        spec = dataclasses.replace(spec, archs=(args.arch,))
+    print(f"scenario {spec.name}: horizon={spec.horizon}s "
+          f"users={spec.n_users} shed_policy={spec.shed_policy}")
+    for res in run_scenario(spec):
+        m = res.metrics
+        print(f"\n[{res.arch}] trace={res.trace_fingerprint} "
+              f"slates={res.slate_fingerprint}")
+        print(f"  requests={m['requests']} served={m['served']} "
+              f"shed={m['shed']} deadline_misses={m['deadline_misses']} "
+              f"hit_rate={m['hit_rate']:.2f}")
+        print(f"  queue delay p50/p99/max = {m['queue_delay']['p50']:.0f}/"
+              f"{m['queue_delay']['p99']:.0f}/{m['queue_delay']['max']}s")
+        for g in res.gates:
+            mark = "PASS" if g["pass"] else "FAIL"
+            print(f"  [{mark}] {g['gate']:22s} budget={g['budget']} "
+                  f"actual={g['actual']}")
+        print(f"  SLO: {'PASS' if res.slo_pass else 'FAIL'}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="registered model config (required unless "
+                         "--scenario, which defaults to its own tiny "
+                         "ranker / fleet roster)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--history", type=int, default=256)
@@ -218,7 +251,21 @@ def main() -> None:
     ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
                     help="run sharded over a data,model mesh (e.g. 8,1); "
                          "--batch must be a multiple of the data size")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="replay a named production traffic scenario "
+                         "(diurnal / flash_crowd / cold_start_storm / "
+                         "churn_heavy / mixed_fleet) through the Gateway "
+                         "against this --arch (reduced shapes) and print "
+                         "the SLO scorecard; --smoke shrinks the trace")
+    ap.add_argument("--smoke", action="store_true",
+                    help="--scenario: short-horizon variant of the trace")
     args = ap.parse_args()
+
+    if args.scenario:
+        run_scenario_cli(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required (except with --scenario)")
 
     mesh_shape = None
     if args.mesh:

@@ -15,6 +15,9 @@ from repro.serving.scheduler import (  # noqa: F401
     Gateway, PrefillStateCache, ServerConfig)
 from repro.serving.loop import (  # noqa: F401
     InjectionServer, ServeResult)
+from repro.serving.loadgen import (  # noqa: F401
+    SCENARIO_NAMES, ScenarioResult, ScenarioSpec, SLOContract, Trace,
+    evaluate_slo, get_scenario, make_trace, run_scenario)
 
 __all__ = [
     # request-level API (serving/api.py)
@@ -28,4 +31,7 @@ __all__ = [
     "Gateway", "ServerConfig", "PrefillStateCache",
     # deprecated wave shim (serving/loop.py)
     "InjectionServer", "ServeResult",
+    # scenario harness (serving/loadgen.py)
+    "SCENARIO_NAMES", "SLOContract", "ScenarioSpec", "ScenarioResult",
+    "Trace", "evaluate_slo", "get_scenario", "make_trace", "run_scenario",
 ]

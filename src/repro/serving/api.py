@@ -116,7 +116,12 @@ class RequestTelemetry:
       * ``"inject"``  — served from a cached prefill state with a
         non-empty fresh suffix injected (the paper's hot path);
       * ``"cached"``  — served from a cached prefill state with no
-        fresh events pending (pure cache read + decode).
+        fresh events pending (pure cache read + decode);
+      * ``"shed"``    — never served: the deadline-aware load-shedder
+        rejected the request because its projected completion time
+        exceeded its deadline (``Response.shed`` is True, the slate is
+        empty, ``pane_id`` is -1). Shed rows are counted in
+        ``GatewayStats.shed``, not in ``paths``.
     """
     request_id: int
     user: int
@@ -135,16 +140,30 @@ class RequestTelemetry:
 @dataclasses.dataclass
 class Response:
     """What one request gets back: the slate, the scores it was ranked
-    from, and the request's telemetry record."""
+    from, and the request's telemetry record.
+
+    ``shed=True`` is the typed rejection marker of deadline-aware load
+    shedding (``ServerConfig.shed_policy``): the scheduler projected the
+    request would complete past its deadline and refused to serve it
+    late. A shed response carries an **empty** slate/scores and a
+    telemetry record with ``path="shed"`` — callers must check ``shed``
+    before reading the slate."""
     slate: np.ndarray          # (slate_len,) int32 greedy distinct items
     scores: np.ndarray         # (vocab_padded,) float32 next-item logits
     telemetry: RequestTelemetry
+    shed: bool = False         # True -> rejected by the load-shedder
 
 
 class Ticket:
-    """Handle for a submitted request; ``response`` fills at flush."""
+    """Handle for a submitted request; ``response`` fills at flush (or
+    immediately with a shed marker when the load-shedder rejects).
+    ``completed_wall`` is the ``time.perf_counter()`` stamp taken when
+    the response filled — ``completed_wall - submitted_wall`` is the
+    request's wall-clock residence time, the number the load generator's
+    per-path serve-latency SLOs gate on."""
 
-    __slots__ = ("request", "request_id", "response", "submitted_wall")
+    __slots__ = ("request", "request_id", "response", "submitted_wall",
+                 "completed_wall")
 
     def __init__(self, request: Request, request_id: int,
                  submitted_wall: float = 0.0):
@@ -152,6 +171,7 @@ class Ticket:
         self.request_id = request_id
         self.response: Optional[Response] = None
         self.submitted_wall = submitted_wall
+        self.completed_wall: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -207,6 +227,8 @@ class GatewayStats:
     inject_calls: int
     decode_steps: int
     deadline_flushes: int
+    shed: int                 # requests rejected by the load-shedder
+    deadline_misses: int      # requests SERVED past their deadline
     paths: Dict[str, int]     # "prefill" / "inject" / "cached" row counts
     queue_delay: Dict[str, float]  # window/p50/p99/max over recent requests
     rollover: RolloverStats

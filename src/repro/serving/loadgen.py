@@ -1,0 +1,603 @@
+"""Trace-driven load generation + SLO gates: the production scenario
+harness.
+
+Every benchmark before this module replayed uniform waves or trickles,
+so the serving wins (warm handoff, continuous batching, the paged pool)
+were only ever measured at steady state. Real recommendation traffic is
+nothing like that — arrival rates swing over the day, flash crowds blow
+through any fixed pane budget, new-user floods start at a 0% hit rate,
+and churn storms land exactly when a snapshot generation rolls. This
+module makes those regimes *reproducible*: a seeded generator emits one
+deterministic interleaved stream of request/event/clock operations per
+named scenario, replays it through the :class:`~repro.serving.scheduler.
+Gateway` via ``submit``/``observe``/``tick``/``poll``, and gates the
+result on the scenario's declared **SLO contract**.
+
+**The op stream.** A :class:`Trace` is a flat tuple of ops ordered by
+simulated second; within one second the clock tick comes first, then
+feedback events, then request arrivals:
+
+    ("t", now)                        gateway.tick(now)
+    ("e", user, item, ts)             gateway.observe((user, item, ts))
+    ("a", user, now, deadline)        gateway.submit(Request(...))
+
+Everything is drawn from one ``np.random.RandomState(seed)``, so the
+same spec always produces the bitwise-identical stream — hashed into
+``Trace.fingerprint`` so a replay can *prove* it ran the same traffic.
+Served slates/scores hash into a second fingerprint
+(:func:`slate_fingerprint`), which is what the determinism gate in the
+``scenarios`` bench and tests/test_scenarios.py compare.
+
+**Named scenarios** (``SCENARIO_NAMES``; build one with
+:func:`get_scenario`):
+
+    diurnal          sinusoidal arrival rate over one simulated "day"
+                     (peak at H/4, trough at 3H/4) with the snapshot
+                     period/offset chosen so one generation rollover
+                     lands AT the peak and one AT the trough — the
+                     worst and best moments to pay a handoff.
+    flash_crowd      a 50x arrival spike with a correlated event burst;
+                     the one scenario whose SLO *requires* load
+                     shedding (``min_shed``) while still bounding the
+                     served p99 queue delay.
+    cold_start_storm a flood of never-seen users (each arrival is a
+                     brand-new id that first acts, then requests):
+                     the 0% cache-hit regime, gated by ``max_hit_rate``.
+    churn_heavy      steady traffic while the event stream touches a
+                     large fraction of the population straddling a
+                     mid-trace rollover — stressing the rekey handoff
+                     and the budgeted re-warm queue.
+    mixed_fleet      one steady trace replayed bit-for-bit across
+                     attention/SSM/MoE architectures from configs/archs
+                     (reduced shapes) — the contract that the harness,
+                     scheduler and SLO gates are model-family-agnostic.
+
+**SLO contracts** (:class:`SLOContract`) gate on *simulated-time*
+metrics (queue-delay percentiles, shed/deadline-miss rates, hit-rate
+bounds), which are deterministic and machine-independent — the numbers
+committed in BENCH_scenarios.json must pass on any host. Wall-clock
+serve-latency budgets per path group (hit/fresh/miss) are supported but
+deliberately generous; they catch pathologies (a path suddenly paying
+compile time), not microseconds. Steady-state scenarios assert
+``max_shed_rate=0`` — shedding must never fire off-overload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+DAY = 86400
+
+SCENARIO_NAMES = ("diurnal", "flash_crowd", "cold_start_storm",
+                  "churn_heavy", "mixed_fleet")
+
+# telemetry path -> SLO path group: "hit" is a pure cache read,
+# "fresh" a cached state + injected suffix (the paper's hot path),
+# "miss" a full batch-history prefill
+PATH_GROUPS = {"cached": "hit", "inject": "fresh", "prefill": "miss"}
+
+
+# ----------------------------------------------------------------------
+# SLO contracts
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLOContract:
+    """Per-scenario service-level objectives. ``None`` disables a gate.
+
+    Sim-time gates (deterministic, machine-independent):
+      * ``queue_delay_p50``/``queue_delay_p99`` — percentile budgets in
+        simulated seconds over *served* requests (shed rows never enter
+        the latency population — they are gated by rate instead).
+      * ``max_deadline_miss_rate`` — served-past-deadline fraction.
+      * ``max_shed_rate`` / ``min_shed`` — shed fraction of submitted
+        requests, and (for overload scenarios) proof shedding engaged.
+      * ``min_hit_rate`` / ``max_hit_rate`` — cache-hit-rate bounds;
+        ``max_hit_rate=0`` is how cold_start_storm certifies it really
+        ran the 0%-hit regime.
+
+    Wall-clock gates (machine-dependent, deliberately generous):
+      * ``wall_ms_p99`` — per path group ("hit"/"fresh"/"miss"), p99 of
+        submit→response wall milliseconds. A group with no served rows
+        passes vacuously.
+    """
+    queue_delay_p50: Optional[float] = None
+    queue_delay_p99: Optional[float] = None
+    max_deadline_miss_rate: Optional[float] = 0.0
+    max_shed_rate: Optional[float] = 0.0
+    min_shed: int = 0
+    min_hit_rate: Optional[float] = None
+    max_hit_rate: Optional[float] = None
+    wall_ms_p99: Optional[Dict[str, float]] = None
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def evaluate_slo(slo: SLOContract, metrics: Dict) -> Tuple[bool, List[Dict]]:
+    """Check ``metrics`` (see :func:`collect_metrics`) against a
+    contract. Returns ``(passed, gates)`` where each gate is
+    ``{"gate", "budget", "actual", "pass"}`` — the full scorecard goes
+    into the bench JSON so a failure says *which* objective broke."""
+    gates: List[Dict] = []
+
+    def gate(name, budget, actual, ok):
+        gates.append({"gate": name, "budget": budget,
+                      "actual": actual, "pass": bool(ok)})
+
+    if slo.queue_delay_p50 is not None:
+        a = metrics["queue_delay"]["p50"]
+        gate("queue_delay_p50_s", slo.queue_delay_p50, a,
+             a <= slo.queue_delay_p50)
+    if slo.queue_delay_p99 is not None:
+        a = metrics["queue_delay"]["p99"]
+        gate("queue_delay_p99_s", slo.queue_delay_p99, a,
+             a <= slo.queue_delay_p99)
+    if slo.max_deadline_miss_rate is not None:
+        a = metrics["deadline_miss_rate"]
+        gate("deadline_miss_rate", slo.max_deadline_miss_rate, a,
+             a <= slo.max_deadline_miss_rate)
+    if slo.max_shed_rate is not None:
+        a = metrics["shed_rate"]
+        gate("shed_rate", slo.max_shed_rate, a, a <= slo.max_shed_rate)
+    if slo.min_shed:
+        a = metrics["shed"]
+        gate("min_shed", slo.min_shed, a, a >= slo.min_shed)
+    if slo.min_hit_rate is not None:
+        a = metrics["hit_rate"]
+        gate("min_hit_rate", slo.min_hit_rate, a, a >= slo.min_hit_rate)
+    if slo.max_hit_rate is not None:
+        a = metrics["hit_rate"]
+        gate("max_hit_rate", slo.max_hit_rate, a, a <= slo.max_hit_rate)
+    if slo.wall_ms_p99:
+        for group, budget in sorted(slo.wall_ms_p99.items()):
+            a = metrics["wall_ms_p99"].get(group)
+            gate(f"wall_ms_p99[{group}]", budget, a,
+                 a is None or a <= budget)  # no rows -> vacuous pass
+    return all(g["pass"] for g in gates), gates
+
+
+# ----------------------------------------------------------------------
+# Scenario specs + trace generation
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """Everything that determines a scenario run: the seeded traffic
+    shape, the feature-store rollover placement, and the gateway
+    configuration it plays against. Frozen so a spec can be hashed into
+    the trace fingerprint's provenance."""
+    name: str
+    kind: str                 # "steady" | "diurnal" | "spike" | "cold"
+    horizon: int              # trace length in simulated seconds
+    n_users: int
+    slo: SLOContract
+    n_items: int = 300
+    seed: int = 7
+    start: int = 5 * DAY + 100   # sim-time origin (after seeded history)
+    base_rate: float = 0.5       # mean arrivals per simulated second
+    peak_mult: float = 1.0       # diurnal peak / spike multiplier
+    spike_start: int = 0         # spike window offset from `start`
+    spike_len: int = 0
+    event_rate: float = 0.25     # mean feedback events per sim second
+    event_burst_mult: float = 1.0  # event-rate multiplier inside the spike
+    deadline_offset: int = 60    # per-request deadline = now + offset
+    hot_frac: float = 0.1        # user locality: hottest fraction...
+    hot_mass: float = 0.8        # ...receives this request mass
+    seen_users: Optional[int] = None  # cold: ids below are the warm world
+    churn_frac: float = 0.0      # events target the first frac of users
+    prelude_events: int = 1200   # seeded history rows before the trace
+    prelude_ts: Tuple[int, int] = (0, 5 * DAY)  # [lo, hi) prelude stamps
+    snapshot_period: int = DAY
+    snapshot_offset: int = 0
+    feature_len: int = 24
+    # gateway/engine knobs
+    max_batch: int = 8
+    prefill_len: int = 32
+    inject_len: int = 8
+    max_wait: Optional[int] = 2
+    pane_service_time: Optional[int] = 1
+    shed_policy: Optional[str] = "deadline"
+    rewarm_budget: int = 0
+    snapshot_build_budget: Optional[int] = None
+    cache_entries: Optional[int] = None  # None -> n_users
+    archs: Tuple[str, ...] = ()  # mixed_fleet: replay across these
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """One deterministic op stream (see module docstring for the op
+    grammar). ``fingerprint`` hashes the full stream — two runs that
+    disagree on it did not replay the same traffic."""
+    name: str
+    seed: int
+    start: int
+    horizon: int
+    ops: Tuple[Tuple, ...]
+    arrivals: int
+    events: int
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.sha256()
+        for op in self.ops:
+            h.update(repr(op).encode())
+        return h.hexdigest()[:16]
+
+
+def _rate_at(spec: ScenarioSpec, t: int) -> float:
+    """Arrival rate (mean arrivals/sim-s) at trace-relative second t."""
+    if spec.kind == "diurnal":
+        # peak at H/4, trough at 3H/4 — the rollovers land on both
+        amp = spec.base_rate * (spec.peak_mult - 1.0)
+        return spec.base_rate + amp * (
+            1.0 + math.sin(2.0 * math.pi * t / spec.horizon)) / 2.0
+    if spec.kind == "spike" and \
+            spec.spike_start <= t < spec.spike_start + spec.spike_len:
+        return spec.base_rate * spec.peak_mult
+    return spec.base_rate
+
+
+def _event_rate_at(spec: ScenarioSpec, t: int) -> float:
+    r = spec.event_rate
+    if spec.kind == "spike" and \
+            spec.spike_start <= t < spec.spike_start + spec.spike_len:
+        r *= spec.event_burst_mult
+    return r
+
+
+def _sample_users(rng: np.random.RandomState, spec: ScenarioSpec,
+                  size: int, pool: int) -> np.ndarray:
+    """Hot-user locality over the first ``pool`` ids: ``hot_mass`` of
+    the draws land on the hottest ``hot_frac`` of users."""
+    hot = max(int(pool * spec.hot_frac), 1)
+    pick_hot = rng.rand(size) < spec.hot_mass
+    return np.where(pick_hot, rng.randint(0, hot, size),
+                    rng.randint(0, pool, size))
+
+
+def make_trace(spec: ScenarioSpec) -> Trace:
+    """Generate the scenario's deterministic op stream. Within each
+    simulated second: one tick, then the second's feedback events, then
+    its request arrivals — so a tick always sees the previous second's
+    queue (max_wait/deadline drains) before new work lands."""
+    rng = np.random.RandomState(spec.seed)
+    pool = spec.seen_users if spec.seen_users is not None else spec.n_users
+    next_cold = pool  # cold kind: sequential never-seen ids
+    ops: List[Tuple] = []
+    n_arrivals = n_events = 0
+    for t in range(spec.horizon):
+        now = spec.start + t
+        ops.append(("t", now))
+        for _ in range(int(rng.poisson(_event_rate_at(spec, t)))):
+            if spec.churn_frac > 0:
+                # churn regime: events sweep a broad slice of the
+                # population so their snapshot rows change across the
+                # mid-trace rollover
+                u = int(rng.randint(0, max(int(pool * spec.churn_frac), 1)))
+            else:
+                u = int(_sample_users(rng, spec, 1, pool)[0])
+            ops.append(("e", u, int(rng.randint(0, spec.n_items)), now))
+            n_events += 1
+        for _ in range(int(rng.poisson(_rate_at(spec, t)))):
+            if spec.kind == "cold":
+                if next_cold >= spec.n_users:
+                    break  # id space exhausted — bound, never wrap
+                u, next_cold = next_cold, next_cold + 1
+                # a cold user acts before they request (signup flow):
+                # their first events exist only in the realtime stream,
+                # so the request prefills an empty batch history and
+                # injects the fresh suffix
+                ops.append(("e", u, int(rng.randint(0, spec.n_items)), now))
+                n_events += 1
+            else:
+                u = int(_sample_users(rng, spec, 1, pool)[0])
+            ops.append(("a", u, now, now + spec.deadline_offset))
+            n_arrivals += 1
+    return Trace(name=spec.name, seed=spec.seed, start=spec.start,
+                 horizon=spec.horizon, ops=tuple(ops),
+                 arrivals=n_arrivals, events=n_events)
+
+
+# ----------------------------------------------------------------------
+# Platform construction
+# ----------------------------------------------------------------------
+
+_ENGINE_CACHE: Dict[Tuple, object] = {}
+
+
+def _engine_for(spec: ScenarioSpec, arch: Optional[str]):
+    """Build (and memoize — jit caches are per engine) the serving
+    engine a scenario runs against: the tiny dense ranker by default, or
+    a reduced same-family variant of a registered arch for mixed_fleet."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ModelConfig, get_config, reduced
+    from repro.models.model import init_params
+    from repro.serving.engine import ServingConfig, ServingEngine
+
+    key = (arch, spec.n_items, spec.max_batch, spec.prefill_len,
+           spec.inject_len)
+    if key in _ENGINE_CACHE:
+        return _ENGINE_CACHE[key]
+    if arch is None:
+        cfg = ModelConfig(
+            name="loadgen-ranker", family="dense", n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab_size=spec.n_items + 256, rope_theta=1e4,
+            tie_embeddings=True)
+    else:
+        cfg = reduced(get_config(arch), n_layers=2, d_model=64,
+                      vocab=spec.n_items + 256)
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    eng = ServingEngine(cfg, params, ServingConfig(
+        max_batch=spec.max_batch, prefill_len=spec.prefill_len,
+        inject_len=spec.inject_len,
+        cache_capacity=spec.prefill_len + spec.inject_len + 64))
+    _ENGINE_CACHE[key] = eng
+    return eng
+
+
+def build_gateway(spec: ScenarioSpec, arch: Optional[str] = None,
+                  engine=None):
+    """The scenario's serving stack: seeded prelude history in both
+    feature stores, an inject-policy injector, and a Gateway configured
+    from the spec (continuous batching + the deadline shed policy by
+    default). The prelude stream is seeded separately from the trace so
+    trace generation and platform construction cannot entangle."""
+    from repro.core.feature_store import (BatchFeatureStore,
+                                          FeatureStoreConfig)
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.serving.scheduler import Gateway, ServerConfig
+
+    eng = engine if engine is not None else _engine_for(spec, arch)
+    rng = np.random.RandomState(spec.seed + 1)
+    pool = spec.seen_users if spec.seen_users is not None else spec.n_users
+    store = BatchFeatureStore(FeatureStoreConfig(
+        n_users=spec.n_users, feature_len=spec.feature_len,
+        snapshot_period=spec.snapshot_period,
+        snapshot_offset=spec.snapshot_offset))
+    rts = RealtimeFeatureService(RealtimeConfig(
+        n_users=spec.n_users, buffer_len=8, ingest_latency=0))
+    if spec.prelude_events:
+        us = _sample_users(rng, spec, spec.prelude_events, pool)
+        its = rng.randint(0, spec.n_items, spec.prelude_events)
+        lo, hi = spec.prelude_ts
+        tss = rng.randint(lo, hi, spec.prelude_events)
+        store.extend(us, its, tss)
+        rts.extend(us, its, tss)
+    inj = FeatureInjector(InjectionConfig(
+        policy="inject", feature_len=spec.feature_len), store, rts)
+    cache_entries = spec.cache_entries or spec.n_users
+    gw = Gateway(eng, inj, ServerConfig(
+        slate_len=4, cache_entries=cache_entries,
+        max_wait=spec.max_wait,
+        pane_service_time=spec.pane_service_time,
+        shed_policy=spec.shed_policy,
+        rewarm_budget=spec.rewarm_budget,
+        snapshot_build_budget=spec.snapshot_build_budget))
+    return gw
+
+
+def _compile_warmup(spec: ScenarioSpec, arch: Optional[str]) -> None:
+    """Compile every jit on the request path (prefill/inject/decode at
+    the scenario's pane shapes) through a throwaway gateway on the SAME
+    engine, so the measured run's wall latencies never pay compile
+    time. The scratch stack shares nothing else with the real run."""
+    from repro.serving.api import Request
+
+    gw = build_gateway(spec, arch)
+    now = spec.start
+    users = np.arange(min(spec.max_batch, spec.n_users))
+    gw.warm(users, now)
+    for u in users:
+        gw.observe((int(u), 0, now))
+    gw.submit_many([Request(user=int(u), now=now + 1) for u in users])
+    gw.flush(now + 1)
+    # the miss path (cold prefill inside a serve pane, incl. empty
+    # histories) compiles against the same pane shapes as warm()
+
+
+# ----------------------------------------------------------------------
+# Scenario replay + metrics
+# ----------------------------------------------------------------------
+
+def slate_fingerprint(tickets: Sequence) -> str:
+    """Hash every response in submission order: served slates/scores
+    byte-for-byte, shed markers by id — the determinism witness."""
+    h = hashlib.sha256()
+    for t in tickets:
+        if t.response.shed:
+            h.update(f"shed:{t.request_id}".encode())
+        else:
+            h.update(np.ascontiguousarray(t.response.slate).tobytes())
+            h.update(np.ascontiguousarray(t.response.scores).tobytes())
+    return h.hexdigest()[:16]
+
+
+def collect_metrics(tickets: Sequence, stats) -> Dict:
+    """Aggregate per-ticket telemetry into the dict
+    :func:`evaluate_slo` gates on."""
+    served = [t for t in tickets if not t.response.shed]
+    shed = len(tickets) - len(served)
+    qd = np.asarray([t.response.telemetry.queue_delay for t in served],
+                    np.int64)
+    wall: Dict[str, List[float]] = {"hit": [], "fresh": [], "miss": []}
+    for t in served:
+        group = PATH_GROUPS[t.response.telemetry.path]
+        wall[group].append((t.completed_wall - t.submitted_wall) * 1e3)
+    hits = sum(t.response.telemetry.cache_hit for t in served)
+    return {
+        "requests": len(tickets), "served": len(served), "shed": shed,
+        "shed_rate": shed / max(len(tickets), 1),
+        "deadline_misses": int(stats.deadline_misses),
+        "deadline_miss_rate": stats.deadline_misses / max(len(served), 1),
+        "hit_rate": hits / max(len(served), 1),
+        "queue_delay": {
+            "p50": float(np.percentile(qd, 50)) if len(qd) else 0.0,
+            "p99": float(np.percentile(qd, 99)) if len(qd) else 0.0,
+            "max": int(qd.max()) if len(qd) else 0,
+        },
+        "wall_ms_p99": {
+            g: (float(np.percentile(v, 99)) if v else None)
+            for g, v in wall.items()},
+        "paths": dict(stats.paths),
+    }
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """One scenario x one architecture: fingerprints, SLO scorecard,
+    and the gateway's own counters."""
+    name: str
+    arch: Optional[str]
+    trace_fingerprint: str
+    slate_fingerprint: str
+    metrics: Dict
+    gates: List[Dict]
+    slo_pass: bool
+    gateway_stats: Dict
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def replay(gw, trace: Trace, spec: ScenarioSpec) -> List:
+    """Drive one op stream through a gateway; returns every ticket in
+    submission order, all resolved (the tail is deadline-drained)."""
+    from repro.serving.api import Request
+
+    tickets: List = []
+    for op in trace.ops:
+        if op[0] == "t":
+            gw.tick(op[1])
+        elif op[0] == "e":
+            gw.observe((op[1], op[2], op[3]))
+        else:
+            tickets.append(gw.submit(Request(
+                user=op[1], now=op[2], deadline=op[3])))
+    # drain at end-of-trace (not later): flush serves the queued tail
+    # regardless of deadlines, whereas jumping the clock further would
+    # manufacture sheds the traffic never caused
+    gw.drain(trace.start + trace.horizon)
+    return tickets
+
+
+def run_scenario(spec: ScenarioSpec, warmup: bool = True,
+                 ) -> List[ScenarioResult]:
+    """Run one scenario end to end: generate the trace, build the
+    platform (per arch for mixed_fleet), warm the cache over the seen
+    population, replay, and gate on the SLO contract. Returns one
+    :class:`ScenarioResult` per architecture (a single ``None`` entry
+    for single-arch scenarios)."""
+    trace = make_trace(spec)
+    archs: Tuple[Optional[str], ...] = spec.archs or (None,)
+    results: List[ScenarioResult] = []
+    for arch in archs:
+        if warmup:
+            _compile_warmup(spec, arch)
+        gw = build_gateway(spec, arch)
+        pool = spec.seen_users if spec.seen_users is not None \
+            else spec.n_users
+        gw.warm(np.arange(pool), spec.start)
+        tickets = replay(gw, trace, spec)
+        assert all(t.done for t in tickets), \
+            "trace replay left unresolved tickets"
+        st = gw.stats()
+        metrics = collect_metrics(tickets, st)
+        passed, gates = evaluate_slo(spec.slo, metrics)
+        results.append(ScenarioResult(
+            name=spec.name, arch=arch,
+            trace_fingerprint=trace.fingerprint,
+            slate_fingerprint=slate_fingerprint(tickets),
+            metrics=metrics, gates=gates, slo_pass=passed,
+            gateway_stats=st.as_dict()))
+    return results
+
+
+# ----------------------------------------------------------------------
+# The named scenarios
+# ----------------------------------------------------------------------
+
+def get_scenario(name: str, smoke: bool = False) -> ScenarioSpec:
+    """Build a named scenario spec (``SCENARIO_NAMES``). ``smoke``
+    shrinks the horizon/population for CI while keeping every regime
+    qualitatively intact (the diurnal rollovers still land at peak and
+    trough, the flash crowd still overloads, cold users still never
+    repeat)."""
+    if name == "diurnal":
+        h = 400 if smoke else 1600
+        start = 5 * DAY + 100
+        period = h // 2
+        # boundaries at start + h/4 (peak) and start + 3h/4 (trough)
+        return ScenarioSpec(
+            name=name, kind="diurnal", horizon=h, n_users=192,
+            seed=11, start=start, base_rate=0.4, peak_mult=4.0,
+            event_rate=0.3,
+            snapshot_period=period,
+            snapshot_offset=(start + h // 4) % period,
+            prelude_ts=(start - h, start - h // 4),
+            slo=SLOContract(queue_delay_p50=4, queue_delay_p99=10,
+                            max_deadline_miss_rate=0.0, max_shed_rate=0.0,
+                            min_hit_rate=0.5,
+                            wall_ms_p99=_WALL_BUDGETS))
+    if name == "flash_crowd":
+        h = 300 if smoke else 900
+        return ScenarioSpec(
+            name=name, kind="spike", horizon=h, n_users=192,
+            seed=13, base_rate=0.4, peak_mult=50.0,
+            spike_start=h // 3, spike_len=max(h // 10, 20),
+            event_rate=0.3, event_burst_mult=10.0,
+            deadline_offset=30,
+            slo=SLOContract(queue_delay_p99=40,
+                            max_deadline_miss_rate=0.05,
+                            max_shed_rate=0.9, min_shed=1,
+                            wall_ms_p99=_WALL_BUDGETS))
+    if name == "cold_start_storm":
+        h = 300 if smoke else 900
+        # every arrival is a brand-new id: reserve enough id space for
+        # the whole storm (rate * horizon, with Poisson headroom)
+        rate = 1.0
+        reserve = int(rate * h * 2) + 64
+        return ScenarioSpec(
+            name=name, kind="cold", horizon=h, n_users=64 + reserve,
+            seen_users=64, seed=17, base_rate=rate, event_rate=0.2,
+            slo=SLOContract(queue_delay_p50=4, queue_delay_p99=10,
+                            max_deadline_miss_rate=0.0, max_shed_rate=0.0,
+                            max_hit_rate=0.0,
+                            wall_ms_p99=_WALL_BUDGETS))
+    if name == "churn_heavy":
+        h = 400 if smoke else 1200
+        start = 5 * DAY + 100
+        period = h  # exactly one boundary mid-trace, at start + h/2
+        return ScenarioSpec(
+            name=name, kind="steady", horizon=h, n_users=192,
+            seed=19, start=start, base_rate=0.5,
+            event_rate=1.5, churn_frac=0.8, rewarm_budget=4,
+            snapshot_period=period,
+            snapshot_offset=(start + h // 2) % period,
+            prelude_ts=(start - h, start - h // 2),
+            slo=SLOContract(queue_delay_p50=4, queue_delay_p99=10,
+                            max_deadline_miss_rate=0.0, max_shed_rate=0.0,
+                            wall_ms_p99=_WALL_BUDGETS))
+    if name == "mixed_fleet":
+        h = 200 if smoke else 600
+        return ScenarioSpec(
+            name=name, kind="steady", horizon=h, n_users=128,
+            seed=23, base_rate=0.5, event_rate=0.3,
+            archs=("llama3.2-1b", "mamba2-780m", "granite-moe-3b-a800m"),
+            slo=SLOContract(queue_delay_p50=4, queue_delay_p99=10,
+                            max_deadline_miss_rate=0.0, max_shed_rate=0.0,
+                            wall_ms_p99=_WALL_BUDGETS))
+    raise KeyError(f"unknown scenario {name!r}; known: {SCENARIO_NAMES}")
+
+
+# generous by design: these catch a path suddenly paying compile/IO
+# time, not microseconds (committed artifacts must pass on any host)
+_WALL_BUDGETS = {"hit": 2000.0, "fresh": 2000.0, "miss": 4000.0}

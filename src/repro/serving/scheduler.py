@@ -281,6 +281,25 @@ class ServerConfig:
     it supersedes ``cache_entries``/``cache_bytes`` — a fixed pool IS
     both budgets). The two knobs are independent: a pooled gateway can
     run wave-style and a continuous one can run on the host LRU.
+
+    **Deadline-aware load shedding.** ``pane_service_time`` gives the
+    scheduler a service model: executing one pane occupies the server
+    for that many request-clock units, tracked by a busy-until marker
+    (``None`` keeps the legacy instantaneous-service semantics — served
+    results are bitwise unchanged either way; the model only adds
+    completion-time accounting). On top of it, ``shed_policy="deadline"``
+    rejects a request — at submit time or when its pane would form —
+    whenever its *projected* completion time (queue position ahead of
+    it, in panes, times the pane cost, on top of the busy-until marker)
+    exceeds its deadline: a slate served after its deadline is worthless
+    to the caller, and executing it anyway steals service time from
+    requests that can still make theirs. A shed request's ticket
+    resolves immediately with a typed ``Response(shed=True)`` marker
+    (empty slate, telemetry ``path="shed"``) and is counted in
+    ``GatewayStats.shed``; requests without a deadline are never shed.
+    Requests that ARE served past their deadline (a coarse tick jumped
+    the clock past it, or the service model's pane cost overran it)
+    count in ``GatewayStats.deadline_misses``.
     """
     slate_len: int = 4            # items decoded per request (default)
     cache_entries: int = 4096     # LRU budget (user-generation states)
@@ -292,6 +311,8 @@ class ServerConfig:
     rewarm_budget: int = 0        # users re-prefilled per tick post-roll
     pool_slots: Optional[int] = None  # device state-pool slots (None = host LRU)
     max_wait: Optional[int] = None    # serve a request after waiting this long
+    pane_service_time: Optional[int] = None  # sim-s one pane occupies the server
+    shed_policy: Optional[str] = None  # None | "deadline" (needs service time)
 
     def __post_init__(self):
         if self.snapshot_build_budget is not None \
@@ -325,6 +346,20 @@ class ServerConfig:
                 f"max_wait must be >= 0 when set (0 serves every arrival "
                 f"immediately; None keeps wave semantics), got "
                 f"{self.max_wait}")
+        if self.pane_service_time is not None and self.pane_service_time < 1:
+            raise ValueError(
+                f"pane_service_time must be >= 1 when set (None keeps "
+                f"instantaneous-service semantics), got "
+                f"{self.pane_service_time}")
+        if self.shed_policy not in (None, "deadline"):
+            raise ValueError(
+                f"unknown shed_policy {self.shed_policy!r}; expected "
+                f"None (never shed) or 'deadline'")
+        if self.shed_policy is not None and self.pane_service_time is None:
+            raise ValueError(
+                "shed_policy='deadline' needs pane_service_time set: "
+                "without a service model every queue drains instantly "
+                "and no projected completion can ever miss a deadline")
 
 
 # ----------------------------------------------------------------------
@@ -382,6 +417,9 @@ class Gateway:
         self.prefill_calls = 0
         self.inject_calls = 0
         self.decode_steps = 0
+        self.shed = 0             # requests rejected by the load-shedder
+        self.deadline_misses = 0  # requests served past their deadline
+        self._busy_until = 0      # service model: sim-time the server frees
         self._path_counts = {"prefill": 0, "inject": 0, "cached": 0}
         self._queue_delays: deque = deque(maxlen=4096)
         self._deadline_flushes = 0
@@ -615,12 +653,18 @@ class Gateway:
         """Enqueue one arrival. Flushes immediately when the queue
         reaches a full ``max_batch`` pane, or when the arrival's clock
         reaches a pending deadline; otherwise the request waits for
-        pane-full / deadline / ``tick`` / ``flush``."""
+        pane-full / deadline / ``tick`` / ``flush``. With
+        ``shed_policy="deadline"`` an arrival whose projected completion
+        already exceeds its deadline is rejected here — its ticket
+        resolves immediately with the shed marker and never enqueues."""
         self._check_request(request)
+        self._advance(request.now)
         t = Ticket(request, self._next_id, time.perf_counter())
         self._next_id += 1
+        if self._should_shed(request, len(self._queue)):
+            self._shed_ticket(t)
+            return t
         self._queue.append(t)
-        self._advance(request.now)
         self._maybe_flush()
         return t
 
@@ -641,8 +685,11 @@ class Gateway:
         for req in requests:
             t = Ticket(req, self._next_id, time.perf_counter())
             self._next_id += 1
-            self._queue.append(t)
             self._advance(req.now)
+            if self._should_shed(req, len(self._queue)):
+                self._shed_ticket(t)
+            else:
+                self._queue.append(t)
             tickets.append(t)
         self._maybe_flush()
         return tickets
@@ -688,6 +735,78 @@ class Gateway:
             return False
         return any(self._clock - t.request.now >= mw for t in self._queue)
 
+    # ------------------------------------------------------------------
+    # Deadline-aware load shedding (shed_policy="deadline")
+    # ------------------------------------------------------------------
+
+    def _projected_done(self, position: int) -> int:
+        """Projected completion time of a request at queue ``position``
+        (0-based), assuming back-to-back full-pane drains from here on:
+        the request rides pane ``position // max_batch`` of the drain,
+        and each pane occupies the server for ``pane_service_time`` on
+        top of the busy-until marker. This is the *optimistic* drain
+        schedule — the queue can only complete later than this (partial
+        panes, new arrivals jumping into earlier panes never happen,
+        reordering preserves pane count) — so shedding on it never
+        rejects a request that could actually have been served in time
+        under full panes."""
+        cost = self.cfg.pane_service_time
+        base = self._busy_until
+        if self._clock is not None:
+            base = max(base, int(self._clock))
+        b = self.engine.scfg.max_batch
+        return base + (position // b + 1) * cost
+
+    def _should_shed(self, req: Request, position: int) -> bool:
+        """Submit-time admission control: would this request, placed at
+        ``position`` in the queue, already complete past its deadline?
+        Requests without a deadline are never shed."""
+        if self.cfg.shed_policy != "deadline" or req.deadline is None:
+            return False
+        return self._projected_done(position) > req.deadline
+
+    def _shed_overdue(self) -> List[Ticket]:
+        """Flush-time admission recheck, run before panes form: walk
+        the queue in order and shed any deadline-carrying request whose
+        projected completion — at the position it actually occupies
+        after earlier sheds compact the queue — exceeds its deadline.
+        Kept requests keep their relative order; returns the shed
+        tickets (already resolved and claimable)."""
+        kept: List[Ticket] = []
+        shed: List[Ticket] = []
+        for t in self._queue:
+            d = t.request.deadline
+            if d is not None and self._projected_done(len(kept)) > d:
+                self._shed_ticket(t)
+                shed.append(t)
+            else:
+                kept.append(t)
+        self._queue = kept
+        return shed
+
+    def _shed_ticket(self, t: Ticket) -> None:
+        """Resolve a ticket with the typed shed marker: empty
+        slate/scores, telemetry ``path="shed"`` with ``pane_id=-1``,
+        claimable through ``poll``/``drain`` like any completion — a
+        shed ticket must never block a caller draining the stream. Shed
+        rows count in ``stats().shed``, not in ``paths`` (they were
+        never served) and not in the queue-delay percentiles."""
+        now = int(self._clock) if self._clock is not None else t.request.now
+        tel = RequestTelemetry(
+            request_id=t.request_id, user=t.request.user,
+            policy=self._policy_of(t.request),
+            slate_len=t.request.slate_len or self.cfg.slate_len,
+            pane_id=-1, queue_delay=max(0, now - t.request.now),
+            cache_hit=False, path="shed",
+            generation=self._gen if self._gen is not None else -1,
+            submitted_at=t.request.now, served_at=now, tag=t.request.tag)
+        t.response = Response(slate=np.empty(0, np.int32),
+                              scores=np.empty(0, np.float32),
+                              telemetry=tel, shed=True)
+        t.completed_wall = time.perf_counter()
+        self._completed.append(t)
+        self.shed += 1
+
     def _maybe_flush(self) -> None:
         """The one flush-trigger policy for every enqueue path: a due
         deadline drains everything (padded short pane); a request past
@@ -728,6 +847,14 @@ class Gateway:
             return []
         now = self._clock
         gen = self._sync_generation(now)
+        shed: List[Ticket] = []
+        if self.cfg.shed_policy == "deadline":
+            # shed before panes form (and before the cache-aware
+            # reorder): a request that cannot make its deadline must
+            # not occupy a pane row a viable request could ride
+            shed = self._shed_overdue()
+            if not self._queue:
+                return shed
         b = self.engine.scfg.max_batch
         q = self._queue
         if len(q) > b:
@@ -742,7 +869,7 @@ class Gateway:
         # tickets are already out of the queue — a retried flush must
         # never re-execute a pane whose responses the caller may hold
         self._queue = q
-        served: List[Ticket] = []
+        served: List[Ticket] = shed
         while len(self._queue) >= b:
             pane = self._queue[:b]
             self._execute(pane, gen)
@@ -867,6 +994,17 @@ class Gateway:
 
         slate, max_len = self._decode(state, first, slate_lens)
         scores = np.asarray(first, np.float32)
+        # service model: with pane_service_time set, this pane occupies
+        # the server for `cost` sim-seconds past whenever it frees up —
+        # completion times (and therefore queue delays and deadline
+        # misses) account for the backlog, not just the flush clock
+        cost = self.cfg.pane_service_time
+        if cost is None:
+            done_at = int(self._clock)
+        else:
+            self._busy_until = max(self._busy_until, int(self._clock)) + cost
+            done_at = self._busy_until
+        wall = time.perf_counter()
         for i, (t, pol) in enumerate(zip(pane, policies)):
             tel = RequestTelemetry(
                 request_id=t.request_id, user=t.request.user, policy=pol,
@@ -876,12 +1014,16 @@ class Gateway:
                 # replays, and a pending request from a later wave would
                 # otherwise record a negative delay and pollute the
                 # stats() queue-delay percentiles
-                queue_delay=max(0, int(self._clock - t.request.now)),
+                queue_delay=max(0, int(done_at - t.request.now)),
                 cache_hit=hit_flags[i], path=paths[i], generation=gen,
-                submitted_at=t.request.now, served_at=int(self._clock),
+                submitted_at=t.request.now, served_at=done_at,
                 tag=t.request.tag)
             t.response = Response(slate=slate[i, :slate_lens[i]].copy(),
                                   scores=scores[i].copy(), telemetry=tel)
+            t.completed_wall = wall
+            if t.request.deadline is not None \
+                    and done_at > t.request.deadline:
+                self.deadline_misses += 1
             self._path_counts[paths[i]] += 1
             self._queue_delays.append(tel.queue_delay)
         self._completed.extend(pane)  # rows retire -> claimable via poll()
@@ -1145,6 +1287,8 @@ class Gateway:
             inject_calls=self.inject_calls,
             decode_steps=self.decode_steps,
             deadline_flushes=self._deadline_flushes,
+            shed=self.shed,
+            deadline_misses=self.deadline_misses,
             paths=dict(self._path_counts),
             queue_delay={
                 "window": int(len(delays)),

@@ -126,6 +126,88 @@ def test_lr_schedule_bounds(total, step):
         assert lr >= cfg.lr * cfg.min_lr_ratio - 1e-12
 
 
+# ----------------------------------------------------------------------
+# Randomized scenario interleavings: pooled+continuous == wave path
+# ----------------------------------------------------------------------
+
+_op = st.one_of(
+    st.tuples(st.just("submit"), st.integers(0, 39),
+              st.sampled_from([None, 0, 1, 2, 5])),   # deadline offset
+    st.tuples(st.just("observe"), st.integers(0, 39),
+              st.integers(0, 299)),
+    st.tuples(st.just("tick"), st.integers(1, 3)),
+    st.tuples(st.just("flush"),),
+)
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(ops1=st.lists(_op, min_size=2, max_size=14),
+       ops2=st.lists(_op, min_size=2, max_size=14))
+def test_random_interleaving_pooled_continuous_equals_wave(ops1, ops2):
+    """Scenario-shaped traffic as a property: an arbitrary interleaving
+    of submit/observe/tick/flush ops — submits carrying deadlines
+    (including deadline == now), with a generation rollover injected
+    between the two op halves — served by the pooled + continuous +
+    shedding gateway must be bitwise equal, request by request, to the
+    host-LRU wave path (submit + immediate flush at the same clock),
+    for every request the shedder admits. Shed tickets must be exactly
+    the difference, and nothing may be dropped."""
+    from conftest import make_gateway, tiny_engine
+
+    cont = make_gateway(engine=tiny_engine(), pool_slots=16, max_wait=0,
+                        pane_service_time=1, shed_policy="deadline")
+    wave = make_gateway(engine=tiny_engine())
+    now = 5 * 86400 + 100
+    pairs = []
+
+    def play(ops):
+        nonlocal now
+        from repro.serving.api import Request
+        for op in ops:
+            if op[0] == "submit":
+                _, user, dl = op
+                req = Request(user=user, now=now,
+                              deadline=None if dl is None else now + dl)
+                a = cont.submit(req)      # served-or-shed on arrival
+                b = wave.submit(req)
+                wave.flush(now)           # the wave path: flush per wave
+                assert a.done and b.done
+                pairs.append((a, b))
+            elif op[0] == "observe":
+                cont.observe((op[1], op[2], now))
+                wave.observe((op[1], op[2], now))
+            elif op[0] == "tick":
+                now += op[1]
+                cont.tick(now)
+                wave.tick(now)
+            else:
+                cont.flush(now)
+                wave.flush(now)
+
+    play(ops1)
+    now += 86400                          # mid-trace generation rollover
+    cont.tick(now)
+    wave.tick(now)
+    play(ops2)
+    cont.drain(now)
+    wave.drain(now)
+
+    shed = 0
+    for a, b in pairs:
+        assert not b.response.shed        # no shed policy on the wave side
+        if a.response.shed:
+            shed += 1
+            assert a.response.telemetry.path == "shed"
+            assert a.response.slate.size == 0
+            continue
+        np.testing.assert_array_equal(a.response.slate, b.response.slate)
+        np.testing.assert_array_equal(a.response.scores, b.response.scores)
+        assert a.response.telemetry.policy == b.response.telemetry.policy
+    assert cont.stats()["shed"] == shed   # every rejection accounted for
+    assert cont.stats()["rollover"].rollovers >= 1
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(0, 500), st.integers(1, 500), st.integers(0, 500),
        st.integers(1, 500))

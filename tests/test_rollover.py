@@ -23,31 +23,18 @@ Load-bearing claims, matching the acceptance criteria:
 """
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import ModelConfig
+from conftest import DAY, FEATURE_LEN, N_ITEMS, N_USERS, tiny_engine
 from repro.core.feature_store import (BatchFeatureStore, FeatureStoreConfig,
                                       SnapshotBuilder)
 from repro.core.injection import FeatureInjector, InjectionConfig
 from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
-from repro.models.model import init_params
 from repro.serving.api import Request
-from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.loop import InjectionServer
 from repro.serving.scheduler import Gateway, ServerConfig
 
-DAY = 86400
-N_USERS, N_ITEMS = 40, 300
-FEATURE_LEN = 24
-
-_CFG = ModelConfig(name="rollover-test", family="dense", n_layers=2,
-                   d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-                   vocab_size=N_ITEMS + 256, rope_theta=1e4,
-                   tie_embeddings=True)
-_PARAMS = init_params(_CFG, jax.random.PRNGKey(0), dtype=jnp.float32)
-_ENGINE = ServingEngine(_CFG, _PARAMS, ServingConfig(
-    max_batch=4, prefill_len=32, inject_len=8, cache_capacity=64))
+_ENGINE = tiny_engine()  # the conftest session-shared tiny platform
 
 
 # ----------------------------------------------------------------------

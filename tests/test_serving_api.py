@@ -20,70 +20,31 @@ The load-bearing claims, matching the redesign's acceptance criteria:
 import dataclasses
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import ModelConfig
+from conftest import DAY, N_ITEMS, N_USERS
+from conftest import ingest as _ingest
+from conftest import make_gateway, seeded_injector, tiny_engine
 from repro.core.ab import ARM_POLICIES, arm_requests, request_arm
-from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
-from repro.core.injection import FeatureInjector, InjectionConfig
-from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
-from repro.launch.mesh import make_serving_mesh
-from repro.models.model import init_params
 from repro.serving.api import (Event, Request, as_event, assign_arms,
                                hash_arm)
-from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.loop import InjectionServer, ServeResult
 from repro.serving.scheduler import Gateway, ServerConfig
 
-DAY = 86400
-N_USERS, N_ITEMS = 40, 300
-FEATURE_LEN = 24
-
-_CFG = ModelConfig(name="api-test", family="dense", n_layers=2, d_model=64,
-                   n_heads=4, n_kv_heads=2, d_ff=128,
-                   vocab_size=N_ITEMS + 256, rope_theta=1e4,
-                   tie_embeddings=True)
-_PARAMS = init_params(_CFG, jax.random.PRNGKey(0), dtype=jnp.float32)
-_SCFG = ServingConfig(max_batch=4, prefill_len=32, inject_len=8,
-                      cache_capacity=64)
-_ENGINE = ServingEngine(_CFG, _PARAMS, _SCFG)
-_MESH_ENGINE = None  # built lazily: the 1×1-mesh sharded code path
+_ENGINE = tiny_engine()  # the conftest session-shared tiny platform
+_CFG = _ENGINE.cfg
 
 
 def _mesh_engine():
-    global _MESH_ENGINE
-    if _MESH_ENGINE is None:
-        _MESH_ENGINE = ServingEngine(_CFG, _PARAMS, _SCFG,
-                                     mesh=make_serving_mesh(1, 1))
-    return _MESH_ENGINE
+    return tiny_engine(mesh1x1=True)  # the 1×1-mesh sharded code path
 
 
 def _injector(policy="inject"):
-    store = BatchFeatureStore(FeatureStoreConfig(
-        n_users=N_USERS, feature_len=FEATURE_LEN))
-    rts = RealtimeFeatureService(RealtimeConfig(
-        n_users=N_USERS, buffer_len=8, ingest_latency=0))
-    rng = np.random.RandomState(0)
-    us, its, tss = (rng.randint(0, N_USERS, 1500),
-                    rng.randint(0, N_ITEMS, 1500),
-                    rng.randint(0, 5 * DAY, 1500))
-    store.extend(us, its, tss)
-    rts.extend(us, its, tss)
-    return FeatureInjector(
-        InjectionConfig(policy=policy, feature_len=FEATURE_LEN), store, rts)
+    return seeded_injector(policy)
 
 
 def _gateway(policy="inject", engine=None, **cfg_kw):
-    cfg_kw.setdefault("slate_len", 3)
-    cfg_kw.setdefault("cache_entries", 64)
-    return Gateway(engine or _ENGINE, _injector(policy), ServerConfig(**cfg_kw))
-
-
-def _ingest(gw, users, items, ts):
-    for u, i, t in zip(users, items, ts):
-        gw.observe((int(u), int(i), int(t)))
+    return make_gateway(policy, engine=engine or _ENGINE, **cfg_kw)
 
 
 # ----------------------------------------------------------------------
@@ -235,6 +196,7 @@ def _run_trace_trickle(gw: Gateway):
     return np.concatenate(scores), np.concatenate(slates)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mesh", [False, True], ids=["plain", "mesh1x1"])
 def test_wave_vs_gateway_bitwise(mesh):
     """The redesign's core contract: the Gateway serves bitwise-identical
@@ -412,6 +374,68 @@ def test_submit_at_deadline_flushes_immediately():
     t1 = gw.submit(Request(user=1, now=now, deadline=now + 10))
     t2 = gw.submit(Request(user=2, now=now + 10))  # clock hits t1's deadline
     assert t1.done and t2.done and gw.pending == 0
+
+
+def test_deadline_equal_to_now_at_submit_serves_immediately():
+    """The boundary of ``_deadline_due`` (deadline <= clock): a request
+    arriving already AT its deadline must flush inside the submit call
+    itself, served at ``now`` with zero delay — not wait for a tick, and
+    not count as a miss (it was served exactly on time)."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    t = gw.submit(Request(user=1, now=now, deadline=now))
+    assert t.done
+    tel = t.response.telemetry
+    assert tel.served_at == now and tel.queue_delay == 0
+    assert gw.stats()["deadline_flushes"] == 1
+    assert gw.stats()["deadline_misses"] == 0
+
+
+def test_multiple_deadlines_fire_on_one_tick():
+    """One coarse tick jumping past several queued deadlines: a single
+    deadline flush serves them all, and each request served past its
+    own deadline is counted as a miss — late service must never be
+    silent."""
+    gw = _gateway()
+    now = 5 * DAY + 100
+    t1 = gw.submit(Request(user=1, now=now, deadline=now + 5))
+    t2 = gw.submit(Request(user=2, now=now, deadline=now + 5))
+    t3 = gw.submit(Request(user=3, now=now + 1, deadline=now + 7))
+    served = gw.tick(now + 10)
+    assert {x.request_id for x in served} == \
+        {t1.request_id, t2.request_id, t3.request_id}
+    assert gw.stats()["deadline_flushes"] == 1  # one flush, not three
+    assert gw.stats()["deadline_misses"] == 3   # all served late
+    assert all(x.response.telemetry.served_at == now + 10 for x in served)
+
+
+def test_deadline_fires_during_rewarm_window():
+    """A deadline flush landing inside a rollover's re-warm window: the
+    tick that fires the deadline must still serve the partial pane (on
+    the new generation) AND keep spending the re-warm budget — the two
+    duties of ``tick`` cannot starve each other."""
+    gw = _gateway(rewarm_budget=1)
+    now = 5 * DAY + 100
+    users = np.arange(8)
+    gw.warm(users, now)
+    # events inside the next generation's window: all eight users change
+    # across the 6*DAY boundary, so the rollover invalidates their
+    # cached states and queues them for budgeted re-warm
+    _ingest(gw, users, (users + 3) % N_ITEMS, np.full(8, now + 50))
+    now2 = 6 * DAY + 10
+    gw.tick(now2)
+    st = gw.stats()
+    assert st["rollover"].rollovers == 1
+    pending0 = st["rollover"].pending_rewarm
+    assert pending0 > 0
+    t = gw.submit(Request(user=3, now=now2 + 1, deadline=now2 + 3))
+    assert not t.done
+    served = gw.tick(now2 + 3)          # deadline fires mid re-warm
+    assert [x.request_id for x in served] == [t.request_id]
+    assert t.response.telemetry.generation == 6 * DAY
+    assert gw.stats()["deadline_misses"] == 0
+    # the re-warm queue kept draining across the deadline tick
+    assert gw.stats()["rollover"].pending_rewarm < pending0
 
 
 def test_duplicate_users_one_wave_single_admission():

@@ -15,63 +15,30 @@ shim-boundary test at the bottom.
 import dataclasses
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import ModelConfig
-from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
-from repro.core.injection import FeatureInjector, InjectionConfig
-from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
-from repro.models.model import init_params
+from conftest import DAY, N_ITEMS, N_USERS
+from conftest import ingest as _ingest
+from conftest import make_gateway, seed_events as _seed_events
+from conftest import seeded_injector, tiny_engine
 from repro.serving.api import Request
-from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.loop import InjectionServer, PrefillStateCache, ServerConfig
 from repro.serving.scheduler import Gateway
 
-DAY = 86400
-N_USERS, N_ITEMS = 40, 300
-FEATURE_LEN = 24
-
-_CFG = ModelConfig(name="loop-test", family="dense", n_layers=2, d_model=64,
-                   n_heads=4, n_kv_heads=2, d_ff=128,
-                   vocab_size=N_ITEMS + 256, rope_theta=1e4,
-                   tie_embeddings=True)
-_PARAMS = init_params(_CFG, jax.random.PRNGKey(0), dtype=jnp.float32)
-_ENGINE = ServingEngine(_CFG, _PARAMS, ServingConfig(
-    max_batch=4, prefill_len=32, inject_len=8, cache_capacity=64))
-
-
-def _seed_events(seed=0, n=1500, t_hi=5 * DAY):
-    rng = np.random.RandomState(seed)
-    return (rng.randint(0, N_USERS, n), rng.randint(0, N_ITEMS, n),
-            rng.randint(0, t_hi, n))
+_ENGINE = tiny_engine()  # the conftest session-shared tiny platform
+_CFG = _ENGINE.cfg
 
 
 def _injector(policy="inject", snapshot_offset=0, events=None):
-    store = BatchFeatureStore(FeatureStoreConfig(
-        n_users=N_USERS, feature_len=FEATURE_LEN,
-        snapshot_offset=snapshot_offset))
-    rts = RealtimeFeatureService(RealtimeConfig(
-        n_users=N_USERS, buffer_len=8, ingest_latency=0))
-    for u, i, t in zip(*(events or _seed_events())):
-        store.append(int(u), int(i), int(t))
-        rts.ingest(int(u), int(i), int(t))
-    return FeatureInjector(
-        InjectionConfig(policy=policy, feature_len=FEATURE_LEN), store, rts)
+    return seeded_injector(policy, snapshot_offset, events)
 
 
 def _server(policy="inject", use_cache=True, cache_entries=256,
             snapshot_offset=0, events=None, slate_len=3):
-    return Gateway(_ENGINE, _injector(policy, snapshot_offset, events),
-                   ServerConfig(slate_len=slate_len,
-                                cache_entries=cache_entries,
-                                use_cache=use_cache))
-
-
-def _ingest(gw, users, items, ts):
-    for u, i, t in zip(users, items, ts):
-        gw.observe((int(u), int(i), int(t)))
+    return make_gateway(policy, engine=_ENGINE,
+                        snapshot_offset=snapshot_offset, events=events,
+                        slate_len=slate_len, cache_entries=cache_entries,
+                        use_cache=use_cache)
 
 
 @dataclasses.dataclass
@@ -101,6 +68,7 @@ def _serve(gw: Gateway, users, now) -> _Wave:
 
 # ----------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_cached_equals_full_prefill_interleaved():
     """Cached-inject scores == full-prefill scores over interleaved
     ingest/serve waves (the differential that makes the cache safe)."""
@@ -201,12 +169,12 @@ def test_warm_clamps_to_cache_budget():
     assert srv.cache.evictions == 0
 
 
+@pytest.mark.slow
 def test_history_longer_than_prefill_len_paths_agree():
     """feature_len > prefill_len: both paths must truncate the history
     identically (history to prefill_len, then the suffix appended) or the
     cache would change scores."""
-    eng = ServingEngine(_CFG, _PARAMS, ServingConfig(
-        max_batch=4, prefill_len=16, inject_len=8, cache_capacity=64))
+    eng = tiny_engine(prefill_len=16)
 
     def srv_with(use_cache):
         return Gateway(eng, _injector(), ServerConfig(

@@ -23,63 +23,29 @@ import json
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import ModelConfig
-from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
-from repro.core.injection import FeatureInjector, InjectionConfig
-from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
-from repro.launch.mesh import make_serving_mesh
-from repro.models.model import init_params
+from conftest import DAY, N_ITEMS, N_USERS
+from conftest import ingest as _ingest
+from conftest import make_gateway, seeded_injector, tiny_engine
 from repro.serving.api import GatewayStats, Request, RolloverStats
-from repro.serving.engine import ServingConfig, ServingEngine
 from repro.serving.pool import DeviceStatePool, PagedStateCache
-from repro.serving.scheduler import Gateway, ServerConfig
 
-DAY = 86400
-N_USERS, N_ITEMS = 40, 300
-FEATURE_LEN = 24
-
-_CFG = ModelConfig(name="pool-test", family="dense", n_layers=2, d_model=64,
-                   n_heads=4, n_kv_heads=2, d_ff=128,
-                   vocab_size=N_ITEMS + 256, rope_theta=1e4,
-                   tie_embeddings=True)
-_PARAMS = init_params(_CFG, jax.random.PRNGKey(0), dtype=jnp.float32)
-_SCFG = ServingConfig(max_batch=4, prefill_len=32, inject_len=8,
-                      cache_capacity=64)
-_ENGINES = {
-    "plain": ServingEngine(_CFG, _PARAMS, _SCFG),
-    "mesh1x1": ServingEngine(_CFG, _PARAMS, _SCFG,
-                             mesh=make_serving_mesh(1, 1)),
+_ENGINES = {  # the conftest session-shared tiny platform, both paths
+    "plain": tiny_engine(),
+    "mesh1x1": tiny_engine(mesh1x1=True),
 }
 
 
 def _injector(policy="inject", seed=0):
-    store = BatchFeatureStore(FeatureStoreConfig(
-        n_users=N_USERS, feature_len=FEATURE_LEN))
-    rts = RealtimeFeatureService(RealtimeConfig(
-        n_users=N_USERS, buffer_len=8, ingest_latency=0))
-    rng = np.random.RandomState(seed)
-    u = rng.randint(0, N_USERS, 1500)
-    it = rng.randint(0, N_ITEMS, 1500)
-    ts = rng.randint(0, 5 * DAY, 1500)
-    store.extend(u, it, ts)
-    rts.extend(u, it, ts)
-    return FeatureInjector(
-        InjectionConfig(policy=policy, feature_len=FEATURE_LEN), store, rts)
+    return seeded_injector(policy, seed=seed)
 
 
 def _gateway(engine, pool_slots=None, max_wait=None, cache_entries=64,
              injector=None):
-    return Gateway(engine, injector or _injector(),
-                   ServerConfig(slate_len=3, cache_entries=cache_entries,
-                                pool_slots=pool_slots, max_wait=max_wait))
-
-
-def _ingest(gw, users, items, ts):
-    for u, i, t in zip(users, items, ts):
-        gw.observe((int(u), int(i), int(t)))
+    return make_gateway(engine=engine, injector=injector,
+                        cache_entries=cache_entries,
+                        pool_slots=pool_slots, max_wait=max_wait)
 
 
 def _prefill_pane(engine, seed=0):

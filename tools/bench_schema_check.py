@@ -1,0 +1,162 @@
+"""Validate every committed BENCH_*.json against its declared schema.
+
+    python tools/bench_schema_check.py [dir]
+
+Each bench suite writes a JSON artifact; nothing until now checked that
+those files keep the shape the docs (docs/benchmarks.md) and downstream
+readers rely on — a refactor could silently rename a key and the
+committed artifact would drift from its schema without any signal. This
+tool pins the contract: a minimal declarative schema per suite (required
+keys + types; extra keys are allowed, artifacts are free to carry more
+detail than the schema pins), plus suite-specific semantic checks (the
+scenarios artifact must record a reproduced determinism replay, and
+every scenario row's ``slo_pass`` must agree with its own gate list).
+
+Stdlib only; exits non-zero on the first schema violation so CI fails
+loudly. Run over the repo root it validates all seven artifacts.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+# ---------------------------------------------------------------------
+# schema mini-language: a spec is a type, a tuple of types, a dict of
+# key -> spec (required keys; unlisted keys pass through), or a
+# one-element list [spec] (homogeneous list, every element checked)
+# ---------------------------------------------------------------------
+
+NUM = (int, float)
+
+
+def check(value, spec, path):
+    if isinstance(spec, dict):
+        if not isinstance(value, dict):
+            return [f"{path}: expected object, got {type(value).__name__}"]
+        errs = []
+        for key, sub in spec.items():
+            if key not in value:
+                errs.append(f"{path}.{key}: missing required key")
+            else:
+                errs.extend(check(value[key], sub, f"{path}.{key}"))
+        return errs
+    if isinstance(spec, list):
+        if not isinstance(value, list):
+            return [f"{path}: expected array, got {type(value).__name__}"]
+        errs = []
+        for i, item in enumerate(value):
+            errs.extend(check(item, spec[0], f"{path}[{i}]"))
+        return errs
+    if spec is None:  # any type accepted (value may also be null)
+        return []
+    if isinstance(value, bool) and spec in (int, NUM):
+        return [f"{path}: expected number, got bool"]
+    if not isinstance(value, spec):
+        want = getattr(spec, "__name__", "/".join(
+            t.__name__ for t in spec))
+        return [f"{path}: expected {want}, got {type(value).__name__}"]
+    return []
+
+
+_CONFIG = {"arch": str, "max_batch": int, "prefill_len": int,
+           "inject_len": int, "feature_len": int, "slate_len": int}
+
+SCHEMAS = {
+    "feature_plane": {"suite": str, "smoke": bool, "results": [dict]},
+    "serving": {"suite": str, "smoke": bool, "config": _CONFIG,
+                "results": [dict]},
+    "serving_sharded": {
+        "suite": str, "smoke": bool, "config": _CONFIG,
+        "results": {"meshes": [dict], "equivalence": dict,
+                    "rps_scaling_1_to_8": NUM}},
+    "scheduler": {
+        "suite": str, "smoke": bool,
+        "config": dict(_CONFIG, deadline_s=int),
+        "slot_pool_check": {"ok": bool, "collectives": int},
+        "results": [dict]},
+    "rollover": {"suite": str, "smoke": bool, "config": _CONFIG,
+                 "results": {"build": dict, "serving": dict}},
+    "scenarios": {
+        "suite": str, "smoke": bool,
+        "config": {"scenarios": [str]},
+        "determinism": {"scenario": str, "trace_fingerprints": [str],
+                        "slate_fingerprints": [str],
+                        "reproducible": bool},
+        "results": [{
+            "name": str, "arch": None, "trace_fingerprint": str,
+            "slate_fingerprint": str, "slo_pass": bool,
+            "slo": dict, "gateway_stats": dict,
+            "metrics": {
+                "requests": int, "served": int, "shed": int,
+                "shed_rate": NUM, "deadline_misses": int,
+                "deadline_miss_rate": NUM, "hit_rate": NUM,
+                "queue_delay": {"p50": NUM, "p99": NUM, "max": int},
+                "wall_ms_p99": dict, "paths": dict},
+            "gates": [{"gate": str, "budget": None, "actual": None,
+                       "pass": bool}],
+        }]},
+}
+
+
+def semantic_checks(doc, path):
+    """Suite-specific invariants beyond key shapes."""
+    errs = []
+    if doc.get("suite") == "scenarios":
+        det = doc.get("determinism", {})
+        if det.get("reproducible") is not True:
+            errs.append(f"{path}: determinism replay did not reproduce")
+        for i, row in enumerate(doc.get("results", [])):
+            gates_ok = all(g.get("pass") for g in row.get("gates", []))
+            if bool(row.get("slo_pass")) != gates_ok:
+                errs.append(f"{path}.results[{i}] ({row.get('name')}): "
+                            f"slo_pass={row.get('slo_pass')} disagrees "
+                            f"with its gate list")
+            m = row.get("metrics", {})
+            if m.get("served", 0) + m.get("shed", 0) != m.get("requests"):
+                errs.append(f"{path}.results[{i}] ({row.get('name')}): "
+                            f"served + shed != requests")
+    return errs
+
+
+def validate_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    suite = doc.get("suite")
+    if suite not in SCHEMAS:
+        return [f"{path}: unknown suite {suite!r} "
+                f"(declared schemas: {sorted(SCHEMAS)})"]
+    errs = check(doc, SCHEMAS[suite], path)
+    errs.extend(semantic_checks(doc, path))
+    return errs
+
+
+def main(argv):
+    root = argv[1] if len(argv) > 1 else "."
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        print(f"no BENCH_*.json under {os.path.abspath(root)}")
+        return 1
+    failures = 0
+    for p in paths:
+        errs = validate_file(p)
+        if errs:
+            failures += 1
+            print(f"FAIL {p}")
+            for e in errs:
+                print(f"  {e}")
+        else:
+            print(f"ok   {p}")
+    if failures:
+        print(f"{failures} of {len(paths)} artifacts failed schema check")
+        return 1
+    print(f"all {len(paths)} artifacts conform to their declared schemas")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
