@@ -27,6 +27,7 @@ Both stores match the retired loop implementations
 """
 from __future__ import annotations
 
+import threading
 from typing import List, Tuple
 
 import numpy as np
@@ -130,6 +131,11 @@ class EventLog:
         self._base: _SortedIndex = None
         self._tail: _SortedIndex = None
         self._tail_span = (0, 0)  # (base_n, n) the cached tail covers
+        # narrow write lock: guards the (columns, _n) pair so a
+        # concurrent ``view()`` never captures a half-written append.
+        # Reads on the owning thread stay lock-free — the lock is only
+        # taken for the O(1)/O(m) column writes and the O(1) capture.
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     # writes
@@ -157,12 +163,13 @@ class EventLog:
     def append(self, user: int, item: int, ts: int) -> None:
         if not 0 <= user < self.n_users:
             raise IndexError(f"user {user} out of range [0, {self.n_users})")
-        self._grow(1)
-        i = self._n
-        self._user[i] = user
-        self._item[i] = item
-        self._ts[i] = ts
-        self._n = i + 1
+        with self._lock:
+            self._grow(1)
+            i = self._n
+            self._user[i] = user
+            self._item[i] = item
+            self._ts[i] = ts
+            self._n = i + 1
 
     def extend(self, users, items, ts) -> None:
         """Columnar bulk append (parallel arrays)."""
@@ -174,12 +181,37 @@ class EventLog:
             raise IndexError(
                 f"user ids out of range [0, {self.n_users}): "
                 f"[{users.min()}, {users.max()}]")
-        self._grow(m)
-        s = self._n
-        self._user[s:s + m] = users
-        self._item[s:s + m] = np.asarray(items)
-        self._ts[s:s + m] = np.asarray(ts)
-        self._n = s + m
+        with self._lock:
+            self._grow(m)
+            s = self._n
+            self._user[s:s + m] = users
+            self._item[s:s + m] = np.asarray(items)
+            self._ts[s:s + m] = np.asarray(ts)
+            self._n = s + m
+
+    def view(self) -> "LogView":
+        """Frozen consistent snapshot of the log for cross-thread reads.
+
+        Captures the column references and the current event count under
+        the write lock. The log is append-only and ``_grow`` copies into
+        *fresh* arrays (it never resizes in place), so every position
+        ``< n`` in the captured columns is immutable afterwards: the view
+        is a stable consistent prefix no matter how many appends race it.
+        O(1) — no data is copied.
+        """
+        with self._lock:
+            # hand over the base index when it covers exactly the
+            # captured prefix: _SortedIndex is immutable once built and
+            # column prefixes survive _grow by content, so the view can
+            # skip its own population-scale lexsort (which would hold
+            # the GIL in long numpy sorts, stalling the capturing
+            # thread's polls). A stale/partial base just means the view
+            # sorts for itself on first materialize.
+            base = self._base
+            reuse = base if (base is not None
+                             and len(base.order) == self._n) else None
+            return LogView(self._user, self._item, self._ts, self._n,
+                           self.n_users, index=reuse)
 
     # ------------------------------------------------------------------
     # index maintenance
@@ -318,3 +350,76 @@ class EventLog:
                                self._ts[p0:self._n], ta, tcounts, k,
                                pane_i[:, k:], pane_t[:, k:], pane_v[:, k:])
         return sort_window_right_align(pane_i, pane_t, pane_v, k, ts_dtype)
+
+
+class LogView:
+    """Immutable snapshot of an :class:`EventLog` prefix, safe to read
+    from another thread while the owning thread keeps appending.
+
+    Captured by ``EventLog.view()``: column *references* plus the event
+    count ``n`` at capture time. Because the log is append-only and
+    growth reallocates (never resizes in place), positions ``< n`` never
+    mutate — so the view needs no locking at all. It carries its own
+    private :class:`_SortedIndex` (built lazily on first ``materialize``,
+    or handed over by ``view()`` when the log's base index already covers
+    exactly the captured prefix — index objects are immutable once built)
+    instead of touching the owning log's cached index *slots*, which are
+    not thread-safe.
+    """
+
+    def __init__(self, user, item, ts, n: int, n_users: int,
+                 index: _SortedIndex = None):
+        n = int(n)
+        self._user = user[:n]
+        self._item = item[:n]
+        self._ts = ts[:n]
+        self._n = n
+        self.n_users = int(n_users)
+        self._index: _SortedIndex = index
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def n_events(self) -> int:
+        return self._n
+
+    # same delta-query semantics as EventLog, against the frozen prefix
+    def users_with_events(self, lo: int, hi: int, start: int = 0,
+                          ) -> np.ndarray:
+        start = max(int(start), 0)
+        if start >= self._n or hi <= lo:
+            return np.empty(0, np.int64)
+        ts = self._ts[start:]
+        mask = (ts >= lo) & (ts < hi)
+        if not mask.any():
+            return np.empty(0, np.int64)
+        return np.unique(self._user[start:][mask])
+
+    def changed_users(self, prev_cutoff: int, new_cutoff: int, window: int,
+                      since: int = 0) -> np.ndarray:
+        entering = self.users_with_events(prev_cutoff, new_cutoff)
+        aging = self.users_with_events(prev_cutoff - window,
+                                       new_cutoff - window)
+        late = self.users_with_events(new_cutoff - window, new_cutoff,
+                                      start=since)
+        return np.union1d(np.union1d(entering, aging), late)
+
+    def materialize(self, users, lo: int, hi: int, k: int,
+                    ts_dtype=np.int32) -> Features:
+        """Identical output to ``EventLog.materialize`` restricted to the
+        captured prefix. Always the fully-indexed fast path — the view is
+        frozen, so there is never a pending suffix to merge."""
+        users = np.asarray(users, np.int64).ravel()
+        m = len(users)
+        items = np.zeros((m, k), np.int32)
+        ts_out = np.zeros((m, k), ts_dtype)
+        valid = np.zeros((m, k), np.int32)
+        if m == 0 or self._n == 0 or hi <= lo:
+            return items, ts_out, valid
+        if self._index is None:
+            self._index = _SortedIndex(self._user, self._item, self._ts)
+        a, counts = self._index.window(users, lo, hi, k)
+        _scatter_right_aligned(self._index.order, self._item, self._ts,
+                               a, counts, k, items, ts_out, valid)
+        return items, ts_out, valid

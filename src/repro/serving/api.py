@@ -194,11 +194,17 @@ class RolloverStats:
     rollovers: int            # generation rolls the gateway handed across
     rekeyed: int              # entries renamed to the new generation
     invalidated: int          # entries purged (changed users/stale gens)
+    retained: int             # changed-user old-gen entries kept at handoff
     rebuilt: int              # users re-prefilled by warm_step
     build_steps: int          # incremental snapshot-build slices run
     build_time_s: float       # wall time spent in completed builds
     pending_build_users: int  # users left in the in-flight build
     pending_rewarm: int       # invalidated users still queued for re-warm
+    # worst single clock-call slice spent advancing the snapshot job
+    # (wall time, so excluded from == — the sharded-equivalence check
+    # compares stats across gateways whose wall clocks differ)
+    build_slice_max_s: float = dataclasses.field(compare=False,
+                                                 default=0.0)
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)

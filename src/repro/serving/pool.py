@@ -325,6 +325,10 @@ class PagedStateCache:
         self.evictions = 0
         self.invalidations = 0
         self.rekeys = 0
+        # handoff window: retained old-generation keys of changed users
+        # (retain_changed rekey) — first victims under slot pressure
+        self._handoff_stale: set = set()
+        self.stale_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -353,8 +357,22 @@ class PagedStateCache:
     def _alloc(self, pinned: Set[int]) -> int:
         if self._free:
             return self._free.popleft()
-        victim = next((k for k, s in self._entries.items()
-                       if s not in pinned), None)
+        # rollover-aware victim order: a retained dual-generation entry
+        # (changed user, old generation) evicts before any live entry —
+        # LRU order among the stale, pin-aware like every eviction here.
+        # _handoff_stale is empty outside the handoff window, so the
+        # steady-state scan is the same single pass as before.
+        victim = None
+        if self._handoff_stale:
+            victim = next((k for k, s in self._entries.items()
+                           if k in self._handoff_stale and s not in pinned),
+                          None)
+        if victim is not None:
+            self._handoff_stale.discard(victim)
+            self.stale_evictions += 1
+        else:
+            victim = next((k for k, s in self._entries.items()
+                           if s not in pinned), None)
         if victim is None:
             raise RuntimeError(
                 f"no allocatable slot: all {self.pool.n_slots} slots are "
@@ -388,30 +406,42 @@ class PagedStateCache:
         for k in stale:
             self._free.append(self._entries.pop(k))
         self.invalidations += len(stale)
+        self._handoff_stale = {k for k in self._handoff_stale
+                               if k in self._entries}
         return len(stale)
 
     def rekey_generation(self, old_gen: int, new_gen: int, changed,
-                         ) -> Tuple[int, int]:
+                         retain_changed: bool = False) -> Tuple[int, int]:
         """Warm handoff, slot-table edition: identical contract to
         ``PrefillStateCache.rekey_generation`` (same caller, same
-        certification requirements — see its docstring), but a rekey is
-        a dict-key rename and an invalidation a free-list push. The
-        device arrays are never read, moved, or zeroed."""
+        certification requirements, same ``retain_changed`` handoff-
+        window semantics — see its docstring), but a rekey is a
+        dict-key rename and an invalidation a free-list push. The
+        device arrays are never read, moved, or zeroed; a retained
+        entry keeps its slot out of the free list until evicted."""
         changed_set = {int(u) for u in np.asarray(changed).ravel()}
         live_new = {u for (u, g) in self._entries if g == new_gen}
         out: "OrderedDict[Tuple[int, int], int]" = OrderedDict()
+        stale: set = set()
         rekeyed = invalidated = 0
         for (u, g), slot in self._entries.items():
             if g == new_gen:
                 out[(u, g)] = slot
-            elif (g == old_gen and u not in changed_set
-                    and u not in live_new):
-                out[(u, new_gen)] = slot
-                rekeyed += 1
+            elif g == old_gen and u not in live_new:
+                if u not in changed_set:
+                    out[(u, new_gen)] = slot
+                    rekeyed += 1
+                elif retain_changed:
+                    out[(u, g)] = slot
+                    stale.add((u, g))
+                else:
+                    self._free.append(slot)
+                    invalidated += 1
             else:
                 self._free.append(slot)
                 invalidated += 1
         self._entries = out
+        self._handoff_stale = stale
         self.rekeys += rekeyed
         self.invalidations += invalidated
         return rekeyed, invalidated
@@ -421,6 +451,8 @@ class PagedStateCache:
                 "misses": self.misses, "evictions": self.evictions,
                 "invalidations": self.invalidations,
                 "rekeys": self.rekeys,
+                "handoff_stale": len(self._handoff_stale),
+                "stale_evictions": self.stale_evictions,
                 "bytes_per_shard": self.bytes_per_shard,
                 "shards": self.shards,
                 "slots": self.pool.n_slots,

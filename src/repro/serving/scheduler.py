@@ -144,6 +144,12 @@ class PrefillStateCache:
         self.evictions = 0
         self.invalidations = 0
         self.rekeys = 0
+        # handoff window: old-generation entries of CHANGED users kept
+        # alive across a rollover (retain_changed rekey). They are the
+        # first victims under any budget pressure — dual-generation
+        # residency is a courtesy, never worth evicting a live entry for.
+        self._handoff_stale: set = set()
+        self.stale_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -167,6 +173,23 @@ class PrefillStateCache:
         return rec[0]
 
     def _pop_lru(self) -> None:
+        # rollover-aware victim order: a retained dual-generation entry
+        # (changed user, old generation — kept through the handoff
+        # window) evicts before ANY live entry, in LRU order among the
+        # stale; only when no stale entry remains does the true LRU go.
+        # The scan is bounded by the handoff window: _handoff_stale is
+        # empty outside it, so steady-state eviction stays O(1).
+        if self._handoff_stale:
+            key = next((k for k in self._entries
+                        if k in self._handoff_stale), None)
+            if key is not None:
+                nb = self._entries.pop(key)[1]
+                self._handoff_stale.discard(key)
+                self.bytes_per_shard -= nb
+                self.evictions += 1
+                self.stale_evictions += 1
+                return
+            self._handoff_stale.clear()  # all dangling: drop the set
         _, (_, nb) = self._entries.popitem(last=False)
         self.bytes_per_shard -= nb
         self.evictions += 1
@@ -193,10 +216,12 @@ class PrefillStateCache:
         for k in stale:
             self.bytes_per_shard -= self._entries.pop(k)[1]
         self.invalidations += len(stale)
+        self._handoff_stale = {k for k in self._handoff_stale
+                               if k in self._entries}
         return len(stale)
 
     def rekey_generation(self, old_gen: int, new_gen: int, changed,
-                         ) -> Tuple[int, int]:
+                         retain_changed: bool = False) -> Tuple[int, int]:
         """Warm handoff across a generation rollover.
 
         Entries keyed ``(user, old_gen)`` whose user is **not** in
@@ -204,31 +229,48 @@ class PrefillStateCache:
         order and byte accounting preserved): an unchanged snapshot row
         means an identical batch history, and a prefill state is a pure
         function of (history, params) — so the entry under the new key
-        is bitwise the entry a fresh admission would build. Changed
-        users' entries — and entries from any other stale generation —
-        are invalidated. The caller is responsible for ``changed`` being
-        the *exact* row-diff between two frozen generations
+        is bitwise the entry a fresh admission would build. The caller is
+        responsible for ``changed`` being a certified row-diff between
+        two frozen generations
         (``BatchFeatureStore.changed_users_between``); rekeying across a
         recomputed (evicted) generation is never safe.
 
-        Returns ``(rekeyed, invalidated)`` counts.
+        Changed users' ``old_gen`` entries are invalidated — or, with
+        ``retain_changed=True``, retained under their old key for the
+        handoff window (the cache briefly holds both generations for
+        those users) and marked first-victim for every budget eviction;
+        the next handoff or ``invalidate_except`` sweeps survivors.
+        Entries from any other stale generation, and ``old_gen``
+        duplicates of users already cached under ``new_gen``, are always
+        invalidated.
+
+        Returns ``(rekeyed, invalidated)`` counts; the retained set is
+        ``_handoff_stale`` / ``stats()["handoff_stale"]``.
         """
         changed_set = {int(u) for u in np.asarray(changed).ravel()}
         live_new = {u for (u, g) in self._entries if g == new_gen}
         out: "OrderedDict[Tuple[int, int], Tuple[Dict[str, Any], int]]" = \
             OrderedDict()
+        stale: set = set()
         rekeyed = invalidated = 0
         for (u, g), rec in self._entries.items():
             if g == new_gen:
                 out[(u, g)] = rec
-            elif (g == old_gen and u not in changed_set
-                    and u not in live_new):
-                out[(u, new_gen)] = rec
-                rekeyed += 1
+            elif g == old_gen and u not in live_new:
+                if u not in changed_set:
+                    out[(u, new_gen)] = rec
+                    rekeyed += 1
+                elif retain_changed:
+                    out[(u, g)] = rec
+                    stale.add((u, g))
+                else:
+                    self.bytes_per_shard -= rec[1]
+                    invalidated += 1
             else:
                 self.bytes_per_shard -= rec[1]
                 invalidated += 1
         self._entries = out
+        self._handoff_stale = stale
         self.rekeys += rekeyed
         self.invalidations += invalidated
         return rekeyed, invalidated
@@ -238,6 +280,8 @@ class PrefillStateCache:
                 "misses": self.misses, "evictions": self.evictions,
                 "invalidations": self.invalidations,
                 "rekeys": self.rekeys,
+                "handoff_stale": len(self._handoff_stale),
+                "stale_evictions": self.stale_evictions,
                 "bytes_per_shard": self.bytes_per_shard,
                 "shards": self.shards}
 
@@ -266,7 +310,14 @@ class ServerConfig:
     daily job from one synchronous full materialization inside
     ``submit``/``tick`` to an incremental delta build advanced by at
     most that many users per clock call (``None`` keeps the legacy
-    synchronous build). ``rewarm_budget`` re-prefills up to that many
+    synchronous build). ``background_build`` moves the whole build onto
+    a dedicated worker thread (``BackgroundSnapshotBuilder``): clock
+    calls shrink to O(1) ``poll()``s and the finished generation
+    installs atomically on the serving thread — bitwise the same arrays
+    as the synchronous modes, at the memory cost of double-buffering
+    the feature plane during the build (it supersedes
+    ``snapshot_build_budget``; sync stays the default).
+    ``rewarm_budget`` re-prefills up to that many
     invalidated (changed) users per ``tick`` after a rollover, so the
     miss storm drains between panes instead of on live requests (0 =
     off; ``warm_step()`` can also be driven explicitly).
@@ -308,6 +359,7 @@ class ServerConfig:
     run_batch_jobs: bool = True   # roll due snapshots on the clock
     warm_handoff: bool = True     # rekey unchanged rows across rollover
     snapshot_build_budget: Optional[int] = None  # users per build step
+    background_build: bool = False  # build snapshots on a worker thread
     rewarm_budget: int = 0        # users re-prefilled per tick post-roll
     pool_slots: Optional[int] = None  # device state-pool slots (None = host LRU)
     max_wait: Optional[int] = None    # serve a request after waiting this long
@@ -424,8 +476,8 @@ class Gateway:
         self._queue_delays: deque = deque(maxlen=4096)
         self._deadline_flushes = 0
         self._rollover = {"rollovers": 0, "rekeyed": 0, "invalidated": 0,
-                          "rebuilt": 0, "build_steps": 0,
-                          "build_time_s": 0.0}
+                          "retained": 0, "rebuilt": 0, "build_steps": 0,
+                          "build_time_s": 0.0, "build_slice_max_s": 0.0}
 
     # ------------------------------------------------------------------
     # Clock / snapshot plumbing
@@ -455,14 +507,23 @@ class Gateway:
         materializes the full plane inside this call); with a budget the
         in-flight :class:`SnapshotBuilder` advances by at most one
         budget-sized slice per call, so a 1M-user build amortizes across
-        panes instead of stalling one submit. Either way, the moment the
-        generation actually rolls the cache takes the **warm handoff**
-        (see ``_handoff``) instead of the old purge-everything."""
+        panes instead of stalling one submit; with ``background_build``
+        the slice is an O(1) ``poll()`` of the worker thread. Either
+        way, the moment the generation actually rolls the cache takes
+        the **warm handoff** (see ``_handoff``) instead of the old
+        purge-everything. The wall time each call spends advancing the
+        job is tracked in ``build_slice_max_s`` — the boundary-stall
+        telemetry the scenario SLO gates read."""
         if self.cfg.run_batch_jobs:
-            if self.cfg.snapshot_build_budget is None:
-                self.injector.batch.maybe_run_due_snapshots(now)
-            else:
+            t0 = time.perf_counter()
+            if self.cfg.background_build \
+                    or self.cfg.snapshot_build_budget is not None:
                 self._step_snapshot_build(now)
+            else:
+                self.injector.batch.maybe_run_due_snapshots(now)
+            dt = time.perf_counter() - t0
+            if dt > self._rollover["build_slice_max_s"]:
+                self._rollover["build_slice_max_s"] = dt
         gen = self.injector.generation(now)
         if gen != self._gen:
             self._handoff(self._gen, gen)
@@ -506,12 +567,21 @@ class Gateway:
                     - c.snapshot_retention * c.snapshot_period:
                 skipped.append(due)
                 due += c.snapshot_period
-            self._builder = store.begin_snapshot(due)
+            self._builder = (store.begin_snapshot_background(due)
+                             if self.cfg.background_build
+                             else store.begin_snapshot(due))
             self._skip_register = skipped
         b = self._builder
-        remaining = b.step(self.cfg.snapshot_build_budget)
-        self._rollover["build_steps"] += 1
+        if self.cfg.background_build:
+            # O(1) while the worker runs; the call that finds the worker
+            # finished pays only the finish-time fixup + atomic install
+            remaining = b.poll()
+        else:
+            remaining = b.step(self.cfg.snapshot_build_budget)
+            self._rollover["build_steps"] += 1
         if remaining == 0:
+            if self.cfg.background_build:
+                self._rollover["build_steps"] += b.steps
             self._rollover["build_time_s"] += b.step_time_s
             for due in self._skip_register:
                 store._register_time(due)
@@ -541,8 +611,13 @@ class Gateway:
             invalidated = self.cache.invalidate_except(new_gen)
             rekeyed = 0
         else:
+            # certified handoff: changed users' old-generation entries
+            # are RETAINED for the handoff window (first-victim under
+            # budget pressure) instead of purged — the dual-generation
+            # residency the rollover-aware eviction order manages
             rekeyed, invalidated = self.cache.rekey_generation(
-                old_gen, new_gen, changed)
+                old_gen, new_gen, changed, retain_changed=True)
+            self._rollover["retained"] += len(self.cache._handoff_stale)
         # MRU-first re-warm order: the hottest invalidated users are the
         # ones most likely to be requested right after the roll
         # (dict.fromkeys dedups a user cached under two stale generations)
@@ -1206,7 +1281,10 @@ class Gateway:
         pol = self.injector.cfg.policy
         b = self.engine.scfg.max_batch
         warmed = 0
-        ev0 = self.cache.evictions
+        # evicting a RETAINED dual-generation entry is not budget
+        # pressure — those are the designated victims of the handoff
+        # window; only a live-entry eviction means the budget refilled
+        ev0 = self.cache.evictions - self.cache.stale_evictions
         for lo in range(0, len(users), b):
             pane = [Request(user=int(u), now=int(now))
                     for u in users[lo:lo + b]]
@@ -1219,7 +1297,7 @@ class Gateway:
                 self._lookup_or_admit(pane, [pol] * len(pane),
                                       [True] * len(pane), gen, int(now))
             warmed += self.cache.misses - before
-            if self.cache.evictions > ev0:
+            if self.cache.evictions - self.cache.stale_evictions > ev0:
                 return warmed, True
         return warmed, False
 

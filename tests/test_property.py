@@ -208,6 +208,84 @@ def test_random_interleaving_pooled_continuous_equals_wave(ops1, ops2):
     assert cont.stats()["rollover"].rollovers >= 1
 
 
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(ops1=st.lists(_op, min_size=2, max_size=14),
+       ops2=st.lists(_op, min_size=2, max_size=14),
+       mid=st.lists(st.tuples(st.integers(0, 39), st.integers(0, 299)),
+                    min_size=0, max_size=6))
+def test_random_schedule_background_build_equals_sync(ops1, ops2, mid):
+    """The off-thread builder as a property: a randomized
+    submit/observe/tick/flush schedule spanning a generation rollover,
+    served once with ``background_build=True`` and once with the
+    synchronous build, must produce bitwise-identical slates for every
+    request — with extra observe traffic landing WHILE the background
+    build is in flight (``mid``; stamped at the current clock, so both
+    gateways' installed planes cover the same event window), and the
+    rollover stats reconciled on every deterministic field."""
+    import time
+
+    from conftest import make_gateway, tiny_engine
+    from repro.serving.api import Request
+
+    eng = tiny_engine()
+    bg = make_gateway(engine=eng, background_build=True)
+    sync = make_gateway(engine=eng)
+    now = 5 * 86400 + 100
+    pairs = []
+
+    def play(ops):
+        nonlocal now
+        for op in ops:
+            if op[0] == "submit":
+                _, user, dl = op
+                req = Request(user=user, now=now,
+                              deadline=None if dl is None else now + dl)
+                a = bg.submit(req)
+                b = sync.submit(req)
+                bg.flush(now)
+                sync.flush(now)
+                pairs.append((a, b))
+            elif op[0] == "observe":
+                bg.observe((op[1], op[2], now))
+                sync.observe((op[1], op[2], now))
+            elif op[0] == "tick":
+                now += op[1]
+                bg.tick(now)
+                sync.tick(now)
+            else:
+                bg.flush(now)
+                sync.flush(now)
+
+    play(ops1)
+    now += 86400
+    bg.tick(now)              # starts the worker on the bg gateway
+    for u, it in mid:         # traffic racing the in-flight build
+        bg.observe((u, it, now))
+        sync.observe((u, it, now))
+    t0 = time.monotonic()
+    while bg._builder is not None:  # settle: poll until install
+        assert time.monotonic() - t0 < 60, "background build stuck"
+        time.sleep(0.001)
+        bg.tick(now)
+    sync.tick(now)
+    assert bg.injector.generation(now) == sync.injector.generation(now)
+    play(ops2)
+    bg.flush(now)
+    sync.flush(now)
+
+    for a, b in pairs:
+        assert a.done and b.done
+        np.testing.assert_array_equal(a.response.slate, b.response.slate)
+        np.testing.assert_array_equal(a.response.scores, b.response.scores)
+    rb = bg.stats()["rollover"]
+    rs = sync.stats()["rollover"]
+    for field in ("rollovers", "rekeyed", "invalidated", "retained",
+                  "rebuilt", "pending_build_users", "pending_rewarm"):
+        assert rb[field] == rs[field], field
+    assert rb["rollovers"] >= 1
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(0, 500), st.integers(1, 500), st.integers(0, 500),
        st.integers(1, 500))

@@ -260,10 +260,12 @@ def _gateway(policy="inject", retention=8, injector=None, **cfg_kw):
 
 def test_rollover_rekeys_unchanged_invalidates_changed():
     """Across a generation roll: users with events in the rolled period
-    are invalidated (their snapshot rows changed); everyone else keeps
-    their cached state under the new generation. The rekeyed entry must
-    be BITWISE the entry a fresh admission under the new generation
-    builds — identical history => identical prefill state."""
+    lose their entry under the new generation (their snapshot rows
+    changed — the old-generation entry is retained for the handoff
+    window, marked first-victim); everyone else keeps their cached
+    state under the new generation. The rekeyed entry must be BITWISE
+    the entry a fresh admission under the new generation builds —
+    identical history => identical prefill state."""
     gw = _gateway()
     now = 5 * DAY + 100
     users = list(range(8))
@@ -275,7 +277,8 @@ def test_rollover_rekeys_unchanged_invalidates_changed():
     gw.tick(now + DAY)
     gen_b = gw.injector.generation(now + DAY)
     st = gw.stats()["rollover"]
-    assert st["rekeyed"] == 5 and st["invalidated"] == 3
+    assert st["rekeyed"] == 5 and st["invalidated"] == 0
+    assert st["retained"] == 3  # changed users' old-gen entries live on
     for u in users:
         assert ((u, gen_b) in gw.cache) == (u not in changed_users)
 
@@ -449,17 +452,20 @@ def test_warm_step_rebuilds_invalidated_users():
     gw.flush(now)
     its = np.arange(8) + 20
     gw.observe_many(users, its, np.full(8, now + 500))  # everyone changes
-    gw.tick(now + DAY)          # roll: all invalidated; rewarm 2
+    gw.tick(now + DAY)          # roll: all stale-retained; rewarm 2
     gen_b = gw.injector.generation(now + DAY)
-    assert gw.stats()["rollover"]["invalidated"] == 8
+    # changed users' old-gen entries are retained (first-victim), not
+    # purged — so 8 retained + 2 rewarmed new-gen entries are resident
+    assert gw.stats()["rollover"]["retained"] == 8
+    assert gw.stats()["rollover"]["invalidated"] == 0
     assert gw.stats()["rollover"]["rebuilt"] == 2
     assert gw.stats()["rollover"]["pending_rewarm"] == 6
-    assert len(gw.cache) == 2
+    assert len(gw.cache) == 10
     # MRU-first: users 7 and 6 were the most recently used entries
     assert (7, gen_b) in gw.cache and (6, gen_b) in gw.cache
     for _ in range(3):
         gw.tick(now + DAY + 60)
-    assert len(gw.cache) == 8
+    assert len(gw.cache) == 16
     assert gw.stats()["rollover"]["pending_rewarm"] == 0
     h0 = gw.cache.hits
     gw.submit_many([Request(user=u, now=now + DAY + 120) for u in users])

@@ -123,6 +123,7 @@ def _metrics(**over):
          "deadline_misses": 0, "deadline_miss_rate": 0.0, "hit_rate": 0.9,
          "queue_delay": {"p50": 2.0, "p99": 5.0, "max": 6},
          "wall_ms_p99": {"hit": 10.0, "fresh": 20.0, "miss": None},
+         "boundary_slice_max_ms": 1.0,
          "paths": {"prefill": 10, "inject": 40, "cached": 50}}
     m.update(over)
     return m
@@ -141,6 +142,8 @@ def _metrics(**over):
     (SLOContract(max_hit_rate=0.9), _metrics(hit_rate=0.95)),
     (SLOContract(wall_ms_p99={"hit": 15.0}),
      _metrics(wall_ms_p99={"hit": 20.0, "fresh": 20.0, "miss": None})),
+    (SLOContract(max_boundary_slice_ms=5.0),
+     _metrics(boundary_slice_max_ms=10.0)),
 ])
 def test_each_gate_fails_on_violation_and_passes_in_budget(contract, bad):
     ok, gates = evaluate_slo(contract, _metrics())
@@ -241,6 +244,86 @@ def test_shed_requires_service_model():
         ServerConfig(shed_policy="deadline")
     with pytest.raises(ValueError, match="shed_policy"):
         ServerConfig(shed_policy="random", pane_service_time=1)
+
+
+# ----------------------------------------------------------------------
+# Background builds under load: zero boundary stall
+# ----------------------------------------------------------------------
+
+def _settle(gw, now, timeout=60.0):
+    """Tick until the in-flight background build installs (ticks are
+    cheap polls; the worker runs off-thread in wall time)."""
+    import time
+    t0 = time.monotonic()
+    while gw._builder is not None:
+        assert time.monotonic() - t0 < timeout, "background build stuck"
+        time.sleep(0.001)
+        gw.tick(now)
+
+
+def _run_bg(spec):
+    """Replay with a settle pass appended so an install racing the end
+    of the trace still lands before metrics are read."""
+    trace = make_trace(spec)
+    gw = build_gateway(spec, engine=tiny_engine())
+    gw.warm(np.arange(spec.seen_users or spec.n_users), spec.start)
+    tickets = replay(gw, trace, spec)
+    _settle(gw, spec.start + spec.horizon)
+    return gw, trace, tickets
+
+
+def test_flash_crowd_background_build_boundary_mid_spike():
+    """A generation boundary landing INSIDE a 25x arrival spike, built
+    off-thread: the SLO gates (including the boundary-stall gate) must
+    pass — no tick during the spike paid a build slice — and the
+    rollover must actually complete with the changed users retained
+    through the handoff window."""
+    h, start = 60, _TINY.start
+    spec = _tiny(
+        name="tiny-flash-bg", kind="spike", horizon=h,
+        base_rate=0.4, peak_mult=25.0, spike_start=h // 3,
+        spike_len=12, event_rate=0.5, event_burst_mult=8.0,
+        deadline_offset=60, background_build=True,
+        # one boundary mid-trace, 6s into the spike window
+        snapshot_period=h, snapshot_offset=(start + h // 3 + 6) % h,
+        prelude_ts=(start - h, start),
+        slo=SLOContract(max_deadline_miss_rate=0.05, max_shed_rate=0.9,
+                        max_boundary_slice_ms=50.0))
+    gw, _, tickets = _run_bg(spec)
+    assert all(t.done for t in tickets)
+    m = collect_metrics(tickets, gw.stats())
+    ok, gates = evaluate_slo(spec.slo, m)
+    assert ok, gates
+    assert any(g["gate"] == "boundary_slice_max_ms" for g in gates)
+    st = gw.stats()["rollover"]
+    assert st["rollovers"] >= 1
+    assert st["build_steps"] > 0 and st["build_time_s"] > 0
+    assert st["rekeyed"] + st["retained"] > 0
+
+
+def test_churn_heavy_background_build_slo():
+    """churn_heavy's regime — 80% of users receive events before the
+    boundary — with the off-thread builder: every gate passes, the
+    boundary stall stays bounded, and the budgeted re-warm drains the
+    retained-stale population after the roll."""
+    h, start = 60, _TINY.start
+    spec = _tiny(
+        name="tiny-churn-bg", kind="steady", horizon=h,
+        base_rate=0.5, event_rate=1.5, churn_frac=0.8,
+        rewarm_budget=4, deadline_offset=60, background_build=True,
+        snapshot_period=h, snapshot_offset=(start + h // 2) % h,
+        prelude_ts=(start - h, start - h // 2),
+        slo=SLOContract(max_deadline_miss_rate=0.0, max_shed_rate=0.0,
+                        max_boundary_slice_ms=50.0))
+    gw, _, tickets = _run_bg(spec)
+    m = collect_metrics(tickets, gw.stats())
+    ok, gates = evaluate_slo(spec.slo, m)
+    assert ok, gates
+    assert m["boundary_slice_max_ms"] <= 50.0
+    st = gw.stats()["rollover"]
+    assert st["rollovers"] >= 1
+    # the churned majority changed: the handoff retained them as stale
+    assert st["retained"] > 0
 
 
 # ----------------------------------------------------------------------

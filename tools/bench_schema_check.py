@@ -76,8 +76,25 @@ SCHEMAS = {
         "config": dict(_CONFIG, deadline_s=int),
         "slot_pool_check": {"ok": bool, "collectives": int},
         "results": [dict]},
-    "rollover": {"suite": str, "smoke": bool, "config": _CONFIG,
-                 "results": {"build": dict, "serving": dict}},
+    "rollover": {
+        "suite": str, "smoke": bool, "config": _CONFIG,
+        "results": {
+            "build": {
+                "n_users": int, "changed_users": int,
+                "full_build_s": NUM, "incremental_total_s": NUM,
+                "incremental_max_clock_slice_s": NUM,
+                "bitwise_equal_oracle": bool,
+                # the off-thread builder row: serving-thread slices only
+                "background": {
+                    "create_s": NUM, "wall_total_s": NUM,
+                    "serving_thread_busy_s": NUM, "polls": int,
+                    "max_clock_slice_s": NUM, "worker_steps": int,
+                    "bitwise_equal_oracle": bool,
+                    "stall_reduction": NUM}},
+            "serving": {
+                "modes": {"eager": dict, "warm": dict,
+                          "background": dict},
+                "responses_bitwise_equal": bool}}},
     "scenarios": {
         "suite": str, "smoke": bool,
         "config": {"scenarios": [str]},
@@ -103,6 +120,17 @@ SCHEMAS = {
 def semantic_checks(doc, path):
     """Suite-specific invariants beyond key shapes."""
     errs = []
+    if doc.get("suite") == "rollover":
+        res = doc.get("results", {})
+        for key, row in (("build", res.get("build", {})),
+                         ("build.background",
+                          res.get("build", {}).get("background", {}))):
+            if row.get("bitwise_equal_oracle") is not True:
+                errs.append(f"{path}.results.{key}: build not certified "
+                            f"bitwise equal to the full-rebuild oracle")
+        if res.get("serving", {}).get("responses_bitwise_equal") is not True:
+            errs.append(f"{path}.results.serving: modes did not serve "
+                        f"bitwise-identical responses")
     if doc.get("suite") == "scenarios":
         det = doc.get("determinism", {})
         if det.get("reproducible") is not True:

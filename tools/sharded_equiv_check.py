@@ -101,10 +101,12 @@ def main() -> int:
             r1 = single.stats()["rollover"]
             r8 = sharded.stats()["rollover"]
             assert r1 == r8, f"rollover stats diverged\n{r1}\n{r8}"
-            assert r8["rekeyed"] > 0 and r8["invalidated"] > 0, r8
+            # changed users' old-gen entries are RETAINED through the
+            # handoff window (first-victim under pressure), not purged
+            assert r8["rekeyed"] > 0 and r8["retained"] > 0, r8
             assert single.cache.rekeys == sharded.cache.rekeys > 0
             print(f"mid-trace rollover: rekeyed={r8['rekeyed']} "
-                  f"invalidated={r8['invalidated']} (both meshes)")
+                  f"retained={r8['retained']} (both meshes)")
         u = rng.randint(0, n_users, 12)
         it = rng.randint(0, n_items, 12)
         ts = np.full(12, at - 40)
