@@ -1154,6 +1154,242 @@ def bench_rollover(smoke: bool = False, out_path: str = None):
 
 
 # ----------------------------------------------------------------------
+def bench_online(smoke: bool = False, out_path: str = None):
+    """Online trainer + hot-swapped delta weight patches, end to end.
+
+    Three measurements:
+
+    **cadence** — patch install frequency vs serving cost. Replays the
+    same seeded request/event waves through gateways that install a
+    delta patch (trainable = embedding slice) never / every 8 waves /
+    every 2 waves, under both install policies (``purge`` drops
+    version-stale cache entries, ``rewarm`` re-prefills them between
+    panes on a budget). Reports throughput, hit rate, patches applied,
+    and the **install stall** — the worst single ``install_patch()``
+    slice the serving thread paid (the hot-swap is O(patch): this
+    number must stay in single-digit milliseconds, and the schema check
+    gates the committed artifact at 5 ms).
+
+    **swap** — the bitwise contract: after an install, the gateway's
+    responses must equal a COLD gateway built directly from the
+    trainer's weights, slate for slate, bit for bit.
+
+    **drift** — why online weights matter at all: on a stream whose
+    item distribution shifts mid-run, the online trainer's loss
+    recovers after the drift while a frozen model's loss stays
+    elevated (the frozen run is the same trainer machinery at lr=0, so
+    both consume byte-identical batches).
+    """
+    print("\n== online (incremental trainer + hot-swapped patches) ==")
+    from repro.configs.base import ModelConfig
+    from repro.core.feature_store import BatchFeatureStore, FeatureStoreConfig
+    from repro.core.injection import FeatureInjector, InjectionConfig
+    from repro.core.realtime import RealtimeConfig, RealtimeFeatureService
+    from repro.models.model import init_params
+    from repro.serving.api import Request
+    from repro.serving.engine import ServingConfig, ServingEngine
+    from repro.serving.scheduler import Gateway, ServerConfig
+    from repro.training import OnlineTrainer, OnlineTrainerConfig
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import TrainConfig
+
+    n_items = 1000
+    feature_len = 48
+    n_users = 256 if smoke else 512
+    ev_per_user = 16 if smoke else 24
+    n_waves = 8 if smoke else 16
+    wave = 32
+    cfg = ModelConfig(
+        name="itfi-ranker-online", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=n_items + 256,
+        rope_theta=10000.0, tie_embeddings=True)
+    scfg = ServingConfig(max_batch=16, prefill_len=64, inject_len=8,
+                         cache_capacity=512)
+    tcfg = TrainConfig(adamw=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                         total_steps=100_000),
+                       remat=False, param_dtype=jnp.float32)
+    ocfg = OnlineTrainerConfig(batch_size=8, seq_len=32,
+                               trainable=("embed",))
+
+    def build(policy="purge"):
+        """Fresh engine (weights get patched) + seeded platform +
+        trainer over the gateway's own event log."""
+        rng = np.random.RandomState(0)
+        n = n_users * ev_per_user
+        store = BatchFeatureStore(FeatureStoreConfig(
+            n_users=n_users, feature_len=feature_len))
+        rts = RealtimeFeatureService(RealtimeConfig(
+            n_users=n_users, buffer_len=8, ingest_latency=0))
+        us = rng.randint(0, n_users, n).astype(np.int64)
+        its = rng.randint(0, n_items, n).astype(np.int64)
+        tss = rng.randint(0, 5 * DAY, n).astype(np.int64)
+        store.extend(us, its, tss)
+        rts.extend(us, its, tss)
+        inj = FeatureInjector(InjectionConfig(
+            policy="inject", feature_len=feature_len), store, rts)
+        eng = ServingEngine(cfg, init_params(
+            cfg, jax.random.PRNGKey(0), dtype=jnp.float32), scfg)
+        gw = Gateway(eng, inj, ServerConfig(
+            slate_len=4, cache_entries=1024, patch_policy=policy,
+            rewarm_budget=64))
+        tr = OnlineTrainer(cfg, eng.params, store.log, cfg=ocfg,
+                           train_cfg=tcfg)
+        return gw, tr
+
+    t00 = 5 * DAY + 100
+
+    def serve_wave(gw, rng, now):
+        q = rng.randint(0, n_users, wave)
+        t0 = time.perf_counter()
+        tk = gw.submit_many([Request(user=int(u), now=int(now))
+                             for u in q])
+        gw.flush(now)
+        return time.perf_counter() - t0, tk
+
+    def drive(gw, tr, every, policy):
+        rng = np.random.RandomState(1)
+        erng = np.random.RandomState(2)
+        gw.warm(np.arange(n_users), t00)
+        serve_wave(gw, np.random.RandomState(99), t00)  # compile, untimed
+        tr.step()                                       # compile, untimed
+        serve_s = 0.0
+        installs = []
+        for i in range(n_waves):
+            now = t00 + 60 * (i + 1)
+            # feedback trickle keeps the trainer's log suffix non-empty
+            gw.observe_many(erng.randint(0, n_users, 16),
+                            erng.randint(0, n_items, 16),
+                            np.full(16, now - 30))
+            dt, _ = serve_wave(gw, rng, now)
+            serve_s += dt
+            if every and (i + 1) % every == 0:
+                tr.step()
+                patch = tr.make_patch()
+                t0 = time.perf_counter()
+                gw.install_patch(patch)
+                installs.append(time.perf_counter() - t0)
+            gw.tick(now + 30)       # rewarm policy rebuilds here
+        st = gw.stats()
+        return {
+            "name": (f"every{every}_{policy}" if every else "none"),
+            "install_every_waves": int(every),
+            "policy": policy,
+            "patches_applied": int(st.patches_applied),
+            "model_version": int(st.model_version),
+            "rps": float(n_waves * wave / serve_s),
+            "hit_rate": float(st.cache["hits"]
+                              / max(st.cache["hits"]
+                                    + st.cache["misses"], 1)),
+            "patch_install_max_ms": float(st.patch_install_max_ms),
+            "patch_install_mean_ms": float(
+                np.mean(installs) * 1e3 if installs else 0.0),
+        }
+
+    results = {"cadence": []}
+    for every, policy in ((0, "purge"), (8, "purge"), (2, "purge"),
+                          (2, "rewarm")):
+        gw, tr = build(policy)
+        row = drive(gw, tr, every, policy)
+        results["cadence"].append(row)
+        print(f"  {row['name']:>13s}: rps={row['rps']:8.1f} "
+              f"hit={row['hit_rate']*100:5.1f}% "
+              f"patches={row['patches_applied']:2d} "
+              f"install max={row['patch_install_max_ms']:.2f}ms "
+              f"mean={row['patch_install_mean_ms']:.2f}ms")
+
+    # ---- swap equivalence: hot-swapped == cold from patched weights ---
+    gw, tr = build()
+    rng = np.random.RandomState(7)
+    q = rng.randint(0, n_users, wave)
+    gw.warm(np.arange(n_users), t00)
+    serve_wave(gw, np.random.RandomState(99), t00)
+    tr.step()
+    patch = tr.make_patch()
+    t0 = time.perf_counter()
+    gw.install_patch(patch)
+    install_ms = (time.perf_counter() - t0) * 1e3
+    t2 = t00 + 600
+    tk = [gw.submit(Request(user=int(u), now=t2)) for u in q]
+    gw.flush(t2)
+    cold_eng = ServingEngine(cfg, tr.params, scfg)
+    cold = Gateway(cold_eng, FeatureInjector(
+        InjectionConfig(policy="inject", feature_len=feature_len),
+        gw.injector.batch, gw.injector.realtime),
+        ServerConfig(slate_len=4, cache_entries=1024))
+    ck = [cold.submit(Request(user=int(u), now=t2)) for u in q]
+    cold.flush(t2)
+    slates = np.stack([t.response.slate for t in tk])
+    scores = np.stack([t.response.scores for t in tk])
+    np.testing.assert_array_equal(
+        slates, np.stack([t.response.slate for t in ck]))
+    np.testing.assert_array_equal(
+        scores, np.stack([t.response.scores for t in ck]))
+    results["swap"] = {
+        "bitwise_equal": True,
+        "patches_applied": int(gw.stats().patches_applied),
+        "model_version": int(gw.stats().model_version),
+        "install_ms": float(install_ms),
+        "patch_leaves": int(patch.n_leaves),
+        "patch_params": int(patch.n_params),
+    }
+    print(f"  swap: {patch.n_leaves} leaves / {patch.n_params} params "
+          f"installed in {install_ms:.2f}ms; responses bitwise equal "
+          f"to cold gateway from patched weights")
+
+    # ---- drift: online adapts, frozen does not ------------------------
+    from repro.core.event_log import EventLog
+    chunks = 16 if smoke else 30
+    drift_at = chunks // 2
+    d_users = 32
+    log = EventLog(n_users=d_users)
+    mk = lambda lr: OnlineTrainer(
+        cfg, init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32),
+        log, cfg=OnlineTrainerConfig(batch_size=8, seq_len=16,
+                                     min_new_events=32),
+        train_cfg=TrainConfig(adamw=AdamWConfig(
+            lr=lr, warmup_steps=2, total_steps=100_000),
+            remat=False, param_dtype=jnp.float32))
+    online, frozen = mk(3e-2), mk(0.0)   # same batches, lr=0 never moves
+    t = 0
+    online_loss, frozen_loss = [], []
+    for c in range(chunks):
+        base = 0 if c < drift_at else 500
+        for _ in range(64):
+            u = t % d_users
+            log.append(u, base + u, 1000 + t)
+            t += 1
+        mo, mf = online.step(), frozen.step()
+        online_loss.append(float(mo["loss"]))
+        frozen_loss.append(float(mf["loss"]))
+    post = slice(-(chunks - drift_at) // 2, None)  # settled post-drift
+    o_post = float(np.mean(online_loss[post]))
+    f_post = float(np.mean(frozen_loss[post]))
+    results["drift"] = {
+        "chunks": chunks, "drift_chunk": drift_at,
+        "online_loss": online_loss, "frozen_loss": frozen_loss,
+        "online_post_drift_loss": o_post,
+        "frozen_post_drift_loss": f_post,
+        "adaptation_ratio": f_post / max(o_post, 1e-9),
+    }
+    print(f"  drift @ chunk {drift_at}: post-drift loss online="
+          f"{o_post:.3f} frozen={f_post:.3f} "
+          f"({results['drift']['adaptation_ratio']:.1f}x)")
+
+    default_name = ("BENCH_online_smoke.json" if smoke
+                    else "BENCH_online.json")
+    out_path = out_path or os.path.join(ROOT, default_name)
+    with open(out_path, "w") as f:
+        json.dump({"suite": "online", "smoke": smoke,
+                   "config": {"arch": cfg.name, "max_batch": 16,
+                              "prefill_len": 64, "inject_len": 8,
+                              "feature_len": feature_len,
+                              "slate_len": 4},
+                   "results": results}, f, indent=2)
+    print(f"  wrote {os.path.abspath(out_path)}")
+    return results
+
+
+# ----------------------------------------------------------------------
 def bench_serving_sharded(smoke: bool = False, out_path: str = None):
     """Data-parallel InjectionServer over 1 → 2 → 8 simulated devices.
 
@@ -1438,6 +1674,7 @@ SECTIONS = {
     "serving_sharded": bench_serving_sharded,
     "scheduler": bench_scheduler,
     "rollover": bench_rollover,
+    "online": bench_online,
     "scenarios": bench_scenarios,
 }
 
@@ -1457,7 +1694,7 @@ def main() -> None:
         if pick and name != pick:
             continue
         if name in ("feature_plane", "serving", "serving_sharded",
-                    "scheduler", "rollover", "scenarios"):
+                    "scheduler", "rollover", "online", "scenarios"):
             if not pick:  # full-size suites take minutes — run them
                 continue  # explicitly via --suite
             fn(smoke=args.smoke, out_path=args.out)

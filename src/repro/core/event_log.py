@@ -405,6 +405,17 @@ class LogView:
                                       start=since)
         return np.union1d(np.union1d(entering, aging), late)
 
+    def events_since(self, start: int = 0,
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``(user, item, ts)`` column views of the events appended at
+        log positions ``>= start`` within the captured prefix, in append
+        order. Zero-copy (array slices of the frozen columns) — the
+        online trainer's consume primitive: it remembers the position it
+        has trained through and asks each fresh view only for the
+        suffix."""
+        start = min(max(int(start), 0), self._n)
+        return (self._user[start:], self._item[start:], self._ts[start:])
+
     def materialize(self, users, lo: int, hi: int, k: int,
                     ts_dtype=np.int32) -> Features:
         """Identical output to ``EventLog.materialize`` restricted to the

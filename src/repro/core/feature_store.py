@@ -284,6 +284,14 @@ class BatchFeatureStore:
             else:
                 self.run_snapshot(due)
 
+    @property
+    def log(self) -> EventLog:
+        """The underlying append-only event log. Exposed read-only by
+        convention: external consumers (the online trainer) take
+        lock-free frozen ``view()`` captures; all writes still go
+        through the store's ingest methods."""
+        return self._log
+
     # ------------------------------------------------------------------
     # Serving reads
     # ------------------------------------------------------------------
@@ -303,6 +311,20 @@ class BatchFeatureStore:
         if snap not in self._snapshots:  # evicted generation: recompute
             return self.lookup_at_cutoff(users, snap)
         items, ts_arr, valid = self._snapshots[snap]
+        return items[users], ts_arr[users], valid[users]
+
+    def snapshot_rows(self, gen: int, users: np.ndarray,
+                      ) -> Optional[Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]]:
+        """Feature rows of a specific **frozen** generation, or ``None``
+        when ``gen`` is not materialized (evicted generations recompute
+        from the live log, which is exactly what the delta-re-warm
+        prefix check must not trust). Rows come straight out of the
+        frozen arrays, so they are bitwise what serving read at that
+        generation."""
+        if gen not in self._snapshots:
+            return None
+        items, ts_arr, valid = self._snapshots[gen]
         return items[users], ts_arr[users], valid[users]
 
     def lookup_at_cutoff(self, users: np.ndarray, cutoff: int,

@@ -135,6 +135,7 @@ class RequestTelemetry:
     submitted_at: int
     served_at: int
     tag: Optional[str] = None
+    model_version: int = 0    # weight version the pane was scored with
 
 
 @dataclasses.dataclass
@@ -196,6 +197,7 @@ class RolloverStats:
     invalidated: int          # entries purged (changed users/stale gens)
     retained: int             # changed-user old-gen entries kept at handoff
     rebuilt: int              # users re-prefilled by warm_step
+    delta_rewarms: int        # entries rebuilt via O(delta) deferred inject
     build_steps: int          # incremental snapshot-build slices run
     build_time_s: float       # wall time spent in completed builds
     pending_build_users: int  # users left in the in-flight build
@@ -239,6 +241,12 @@ class GatewayStats:
     queue_delay: Dict[str, float]  # window/p50/p99/max over recent requests
     rollover: RolloverStats
     cache: Dict[str, int]     # PrefillStateCache / PagedStateCache counters
+    model_version: int = 0    # current hot-swapped weight version
+    patches_applied: int = 0  # delta weight patches installed so far
+    # worst single install_patch() stall observed on the serving thread
+    # (wall-clock ms, so excluded from == like build_slice_max_s)
+    patch_install_max_ms: float = dataclasses.field(compare=False,
+                                                    default=0.0)
 
     def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)  # recurses into RolloverStats

@@ -143,6 +143,49 @@ class ServingEngine:
                               jax.ShapeDtypeStruct((b, p), jnp.bool_))
 
     # ------------------------------------------------------------------
+    def apply_patch(self, leaves: Dict[str, Any]) -> int:
+        """Install new values for a subset of parameter leaves.
+
+        ``leaves`` maps ``jax.tree_util.keystr`` paths (the convention
+        ``training/online.py`` emits) to full replacement arrays. O(patch):
+        only the named leaves are validated, transferred (re-placed to
+        their sharded layout on a mesh) and rebound; every other leaf
+        object is reused as-is, and ``self.params`` swaps in one tree
+        rebind — the caller (``Gateway.install_patch``) decides *when*
+        that rebind is safe (between panes). Shapes and dtypes must match
+        the current tree exactly: the jitted entry points were traced
+        against them, and a silent mismatch would mean recompilation (or
+        wrong math) mid-serving. Returns the number of leaves patched.
+        """
+        if not leaves:
+            return 0
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.params)
+        by_path = {jax.tree_util.keystr(p): i for i, (p, _) in
+                   enumerate(flat)}
+        ns_leaves = (jax.tree.leaves(self._param_ns)
+                     if self.mesh is not None else None)
+        new_leaves = [leaf for _, leaf in flat]
+        for key, val in leaves.items():
+            i = by_path.get(key)
+            if i is None:
+                raise KeyError(
+                    f"patch leaf {key!r} is not in the parameter tree")
+            old = new_leaves[i]
+            arr = jnp.asarray(val)
+            if tuple(arr.shape) != tuple(old.shape):
+                raise ValueError(
+                    f"patch leaf {key!r}: shape {tuple(arr.shape)} != "
+                    f"{tuple(old.shape)}")
+            if arr.dtype != old.dtype:
+                raise ValueError(
+                    f"patch leaf {key!r}: dtype {arr.dtype} != "
+                    f"{old.dtype}")
+            new_leaves[i] = (jax.device_put(arr, ns_leaves[i])
+                            if ns_leaves is not None else arr)
+        self.params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        return len(leaves)
+
+    # ------------------------------------------------------------------
     def pad_tokens(self, seqs, length: int, align: str = "right",
                    ) -> Tuple[np.ndarray, np.ndarray]:
         """Pad a list of variable-length token lists into (tokens, valid)

@@ -275,6 +275,38 @@ class PrefillStateCache:
         self.invalidations += invalidated
         return rekeyed, invalidated
 
+    def rekey_entry(self, user: int, old_gen, new_gen) -> bool:
+        """Rename ONE entry ``(user, old_gen)`` -> ``(user, new_gen)``
+        in place (the per-entry twin of :meth:`rekey_generation`, used
+        by the O(delta) re-warm: the caller has certified that the old
+        entry plus a deferred inject reproduces what a fresh admission
+        at ``new_gen`` would serve). Counts as a rekey; an existing
+        ``new_gen`` entry for the user is replaced. Returns False when
+        no ``(user, old_gen)`` entry exists."""
+        rec = self._entries.pop((user, old_gen), None)
+        if rec is None:
+            return False
+        prev = self._entries.pop((user, new_gen), None)
+        if prev is not None:
+            self.bytes_per_shard -= prev[1]
+        self._entries[(user, new_gen)] = rec
+        self._entries.move_to_end((user, new_gen))
+        self._handoff_stale.discard((user, old_gen))
+        self.rekeys += 1
+        return True
+
+    def drop(self, user: int, gen) -> bool:
+        """Invalidate one entry (serve-time fallback when a deferred
+        delta no longer fits the inject budget: the row must take a
+        full prefill instead). Returns False when absent."""
+        rec = self._entries.pop((user, gen), None)
+        if rec is None:
+            return False
+        self.bytes_per_shard -= rec[1]
+        self._handoff_stale.discard((user, gen))
+        self.invalidations += 1
+        return True
+
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,
                 "misses": self.misses, "evictions": self.evictions,
@@ -365,6 +397,10 @@ class ServerConfig:
     max_wait: Optional[int] = None    # serve a request after waiting this long
     pane_service_time: Optional[int] = None  # sim-s one pane occupies the server
     shed_policy: Optional[str] = None  # None | "deadline" (needs service time)
+    patch_policy: str = "purge"   # "purge" | "rewarm": cache policy at a
+    #                               weight-patch install (see install_patch)
+    delta_rewarm: bool = False    # O(delta) re-warm via deferred inject
+    #                               (host LRU only; see _try_delta_rewarm)
 
     def __post_init__(self):
         if self.snapshot_build_budget is not None \
@@ -412,6 +448,17 @@ class ServerConfig:
                 "shed_policy='deadline' needs pane_service_time set: "
                 "without a service model every queue drains instantly "
                 "and no projected completion can ever miss a deadline")
+        if self.patch_policy not in ("purge", "rewarm"):
+            raise ValueError(
+                f"unknown patch_policy {self.patch_policy!r}; expected "
+                f"'purge' (drop version-stale entries at a weight-patch "
+                f"install) or 'rewarm' (queue them for budgeted re-warm)")
+        if self.delta_rewarm and self.pool_slots is not None:
+            raise ValueError(
+                "delta_rewarm needs the host LRU: pool slots are "
+                "fixed-shape device states, so a deferred-delta entry "
+                "(old-generation state + pending inject tokens) cannot "
+                "live in the paged pool — unset pool_slots")
 
 
 # ----------------------------------------------------------------------
@@ -453,7 +500,19 @@ class Gateway:
             self.cache = PrefillStateCache(cfg.cache_entries,
                                            byte_budget=cfg.cache_bytes,
                                            shards=engine.data_shards)
-        self._gen = None  # generation the cache was last validated against
+        # the cache-key generation is COMPOSITE: (snapshot cutoff,
+        # model version). Both caches compare keys only by equality, so
+        # a weight-patch install invalidates exactly like a snapshot
+        # roll — by making every old key unequal to the current one
+        self._gen: Optional[Tuple[int, int]] = None
+        self._model_version = 0   # advances only inside install_patch
+        self._trainer = None      # attached OnlineTrainer (patch source)
+        # (old_vgen, new_vgen) of the last CERTIFIED warm handoff, while
+        # its retained old-generation entries are still eligible for the
+        # O(delta) deferred-inject re-warm; cleared by the next handoff
+        # or patch install
+        self._handoff_from: Optional[Tuple[Tuple[int, int],
+                                           Tuple[int, int]]] = None
         self._clock: Optional[int] = None
         self._queue: List[Ticket] = []
         self._completed: deque = deque()  # served, unclaimed by poll()
@@ -476,8 +535,11 @@ class Gateway:
         self._queue_delays: deque = deque(maxlen=4096)
         self._deadline_flushes = 0
         self._rollover = {"rollovers": 0, "rekeyed": 0, "invalidated": 0,
-                          "retained": 0, "rebuilt": 0, "build_steps": 0,
-                          "build_time_s": 0.0, "build_slice_max_s": 0.0}
+                          "retained": 0, "rebuilt": 0, "delta_rewarms": 0,
+                          "build_steps": 0, "build_time_s": 0.0,
+                          "build_slice_max_s": 0.0}
+        self._patches_applied = 0
+        self._patch_install_max_s = 0.0
 
     # ------------------------------------------------------------------
     # Clock / snapshot plumbing
@@ -498,9 +560,12 @@ class Gateway:
         if now is not None and (self._clock is None or now > self._clock):
             self._clock = int(now)
 
-    def _sync_generation(self, now: int) -> int:
+    def _sync_generation(self, now: int) -> Tuple[int, int]:
         """Advance the daily job and hand the cache across any resulting
-        generation roll.
+        generation roll. Returns the current **composite** generation
+        ``(snapshot cutoff, model version)`` — the cache key axis pair:
+        snapshot rolls move the first component (warm handoff below),
+        weight-patch installs move the second (``install_patch``).
 
         With ``snapshot_build_budget`` unset the job is the legacy
         synchronous ``maybe_run_due_snapshots`` (a due boundary
@@ -524,7 +589,7 @@ class Gateway:
             dt = time.perf_counter() - t0
             if dt > self._rollover["build_slice_max_s"]:
                 self._rollover["build_slice_max_s"] = dt
-        gen = self.injector.generation(now)
+        gen = (self.injector.generation(now), self._model_version)
         if gen != self._gen:
             self._handoff(self._gen, gen)
             self._gen = gen
@@ -588,7 +653,8 @@ class Gateway:
             self._skip_register = []
             self._builder = None
 
-    def _handoff(self, old_gen: Optional[int], new_gen: int) -> None:
+    def _handoff(self, old_gen: Optional[Tuple[int, int]],
+                 new_gen: Tuple[int, int]) -> None:
         """Cache handoff at a generation roll: rekey entries whose
         snapshot row is unchanged (identical history => identical prefill
         state, so served results are bitwise what a purge + re-prefill
@@ -596,16 +662,21 @@ class Gateway:
         invalidated users for budgeted re-warming. Falls back to the
         purge-everything rollover whenever the exact changed set cannot
         be certified (first generation, handoff disabled, a generation
-        gap, or either generation evicted/recomputed)."""
+        gap, either generation evicted/recomputed, or a model-version
+        change riding the same roll — a prefill state is a function of
+        (history, params), so rekeying across params is never safe;
+        ``install_patch`` handles the params axis itself)."""
+        self._handoff_from = None
         if old_gen is None:
             # first sync: the gateway is discovering the current
             # generation, not rolling one — nothing can be cached yet
             self.cache.invalidate_except(new_gen)
             return
         changed = None
-        if self.cfg.warm_handoff and old_gen >= 0:
+        if self.cfg.warm_handoff and old_gen[0] >= 0 \
+                and old_gen[1] == new_gen[1]:
             changed = self.injector.batch.changed_users_between(
-                old_gen, new_gen)
+                old_gen[0], new_gen[0])
         stale_users = [u for (u, g) in self.cache._entries if g != new_gen]
         if changed is None:
             invalidated = self.cache.invalidate_except(new_gen)
@@ -618,6 +689,7 @@ class Gateway:
             rekeyed, invalidated = self.cache.rekey_generation(
                 old_gen, new_gen, changed, retain_changed=True)
             self._rollover["retained"] += len(self.cache._handoff_stale)
+            self._handoff_from = (old_gen, new_gen)
         # MRU-first re-warm order: the hottest invalidated users are the
         # ones most likely to be requested right after the roll
         # (dict.fromkeys dedups a user cached under two stale generations)
@@ -627,6 +699,87 @@ class Gateway:
         self._rollover["rollovers"] += 1
         self._rollover["rekeyed"] += rekeyed
         self._rollover["invalidated"] += invalidated
+
+    # ------------------------------------------------------------------
+    # Online weight patches (hot swap)
+    # ------------------------------------------------------------------
+
+    def attach_trainer(self, trainer) -> None:
+        """Attach an :class:`~repro.training.online.OnlineTrainer` as the
+        gateway's patch source: every ``tick``/drain boundary polls it
+        for finished delta patches and installs them via
+        :meth:`install_patch` — always *between* panes, never mid-pane.
+        The trainer's base version must match the gateway's current
+        model version (both start at 0)."""
+        if trainer is not None and trainer.version != self._model_version:
+            raise ValueError(
+                f"trainer is at version {trainer.version} but the "
+                f"gateway serves model version {self._model_version}; "
+                f"patches would fail the base-version guard")
+        self._trainer = trainer
+
+    def install_patch(self, patch) -> int:
+        """Hot-swap a :class:`~repro.training.online.WeightPatch` into
+        the live engine: O(patch) — only the patched leaves move, the
+        jit caches survive (same shapes/dtypes), and there is no
+        checkpoint reload. The patch must be based on the currently
+        served version (base-version guard); the install advances the
+        model-version axis of the composite cache generation, so every
+        state prefilled under the old weights becomes unreachable
+        atomically. ``patch_policy`` decides their fate: ``"purge"``
+        drops them; ``"rewarm"`` queues their users (MRU-first) for the
+        budgeted ``warm_step`` re-prefill under the new weights.
+
+        Only this method ever advances ``model_version``, and it runs
+        synchronously on the serving thread between panes — a pane in
+        flight always scores every row under one parameter set.
+        Returns the number of leaves swapped."""
+        if patch.base_version != self._model_version:
+            raise ValueError(
+                f"patch {patch.version} is based on version "
+                f"{patch.base_version}, but the gateway serves version "
+                f"{self._model_version}; re-emit the patch from the "
+                f"served version (patches never skip or rewind)")
+        t0 = time.perf_counter()
+        n = self.engine.apply_patch(patch.leaves)
+        self._model_version = int(patch.version)
+        self._patches_applied += 1
+        # a params change invalidates the delta-rewarm window too: the
+        # retained old-generation states were prefilled under old weights
+        self._handoff_from = None
+        if self._gen is not None:
+            old_vgen = self._gen
+            new_vgen = (old_vgen[0], self._model_version)
+            stale_users = [u for (u, g) in self.cache._entries
+                           if g != new_vgen]
+            self.cache.invalidate_except(new_vgen)
+            if self.cfg.patch_policy == "rewarm":
+                self._rewarm_queue = deque(dict.fromkeys(
+                    reversed(stale_users)))
+            else:
+                self._rewarm_queue.clear()
+            self._gen = new_vgen
+        dt = time.perf_counter() - t0
+        if dt > self._patch_install_max_s:
+            self._patch_install_max_s = dt
+        return n
+
+    def _maybe_install_patches(self) -> int:
+        """Drain the attached trainer's finished patches (if any) into
+        the engine. Called at the top of ``tick`` and of every queue
+        drain — the between-panes boundaries — so an in-flight pane
+        never observes a version change."""
+        tr = self._trainer
+        if tr is None:
+            return 0
+        n = 0
+        while True:
+            patch = tr.poll_patch()
+            if patch is None:
+                break
+            self.install_patch(patch)
+            n += 1
+        return n
 
     # ------------------------------------------------------------------
     # Ingestion (the other half of the facade)
@@ -695,6 +848,7 @@ class Gateway:
         invalidated. Returns tickets served by a deadline flush
         (usually none)."""
         self._advance(now)
+        self._maybe_install_patches()
         self._sync_generation(self._clock)
         served: List[Ticket] = []
         if self._deadline_due():
@@ -873,8 +1027,9 @@ class Gateway:
             slate_len=t.request.slate_len or self.cfg.slate_len,
             pane_id=-1, queue_delay=max(0, now - t.request.now),
             cache_hit=False, path="shed",
-            generation=self._gen if self._gen is not None else -1,
-            submitted_at=t.request.now, served_at=now, tag=t.request.tag)
+            generation=self._gen[0] if self._gen is not None else -1,
+            submitted_at=t.request.now, served_at=now, tag=t.request.tag,
+            model_version=self._model_version)
         t.response = Response(slate=np.empty(0, np.int32),
                               scores=np.empty(0, np.float32),
                               telemetry=tel, shed=True)
@@ -918,6 +1073,7 @@ class Gateway:
         otherwise drag the whole pane onto the prefill path. Rows are
         independent, so regrouping cannot change any result.
         """
+        self._maybe_install_patches()
         if not self._queue:
             return []
         now = self._clock
@@ -1009,7 +1165,7 @@ class Gateway:
     # Pane execution
     # ------------------------------------------------------------------
 
-    def _execute(self, pane: List[Ticket], gen: int) -> None:
+    def _execute(self, pane: List[Ticket], gen: Tuple[int, int]) -> None:
         eng = self.engine
         pane_id = self.panes
         self.panes += 1
@@ -1019,6 +1175,31 @@ class Gateway:
         slate_lens = [r.slate_len or self.cfg.slate_len for r in reqs]
         suffix = self._suffixes(reqs, policies, now)
         cacheable = [self._row_cacheable(p) for p in policies]
+        if self.cfg.delta_rewarm and self.pool is None:
+            # deferred-delta entries (O(delta) re-warm): the snapshot
+            # delta the entry skipped at rekey time rides ahead of the
+            # row's realtime suffix in the SAME inject — token-for-token
+            # the stream the pre-rollover path would have injected. The
+            # entry is read-only (states are never written back), so the
+            # pending tokens stay attached until the entry is evicted or
+            # the next handoff sweeps it. Peek without touching LRU
+            # order or hit/miss counters; _lookup_or_admit probes next.
+            cap = eng.scfg.inject_len
+            for i, (req, can) in enumerate(zip(reqs, cacheable)):
+                if not can:
+                    continue
+                rec = self.cache._entries.get((req.user, gen))
+                pending = rec[0].get("pending") if rec is not None else None
+                if not pending:
+                    continue
+                combined = list(pending) + suffix[i]
+                if len(combined) <= cap:
+                    suffix[i] = combined
+                else:
+                    # delta + fresh events outgrew one inject: the
+                    # deferral no longer pays — fall back to a full
+                    # prefill for this user (drop makes the row a miss)
+                    self.cache.drop(req.user, gen)
 
         if not any(cacheable):
             # pure-uncacheable pane (policy "fresh", or caching off):
@@ -1090,9 +1271,9 @@ class Gateway:
                 # otherwise record a negative delay and pollute the
                 # stats() queue-delay percentiles
                 queue_delay=max(0, int(done_at - t.request.now)),
-                cache_hit=hit_flags[i], path=paths[i], generation=gen,
+                cache_hit=hit_flags[i], path=paths[i], generation=gen[0],
                 submitted_at=t.request.now, served_at=done_at,
-                tag=t.request.tag)
+                tag=t.request.tag, model_version=gen[1])
             t.response = Response(slate=slate[i, :slate_lens[i]].copy(),
                                   scores=scores[i].copy(), telemetry=tel)
             t.completed_wall = wall
@@ -1335,9 +1516,14 @@ class Gateway:
             return 0
         gen = self._gen
         users: List[int] = []
-        while self._rewarm_queue and len(users) < budget:
+        delta_done = 0
+        while self._rewarm_queue and len(users) + delta_done < budget:
             u = self._rewarm_queue.popleft()
-            if (u, gen) not in self.cache:
+            if (u, gen) in self.cache:
+                continue
+            if self._try_delta_rewarm(int(u), gen):
+                delta_done += 1
+            else:
                 users.append(int(u))
         warmed, evicted = self._admit_users(users, gen, int(self._clock))
         if evicted:
@@ -1348,7 +1534,67 @@ class Gateway:
             # this churn
             self._rewarm_queue.clear()
         self._rollover["rebuilt"] += warmed
-        return warmed
+        self._rollover["delta_rewarms"] += delta_done
+        return warmed + delta_done
+
+    def _try_delta_rewarm(self, u: int, new_vgen: Tuple[int, int]) -> bool:
+        """O(delta) re-warm (``ServerConfig.delta_rewarm``): when a
+        changed user's NEW snapshot row strictly extends their old row
+        (append-only history, no retention trim), the retained
+        old-generation entry already holds a prefill of a prefix of the
+        new history — so instead of paying a fresh ``prefill_len``-wide
+        prefill, rekey the retained entry to the new generation and
+        attach the (new - old) delta as **pending inject tokens**. The
+        serve path prepends them to the row's realtime suffix: one
+        inject of ``delta + fresh`` on the old state is token-for-token
+        the computation the pre-rollover gateway would have run (the
+        delta events WERE that gateway's realtime suffix), so slates
+        and scores are bitwise what serving across no rollover yields.
+
+        Qualifies only inside the certified handoff window
+        (``_handoff_from``), same model version on both sides, host LRU
+        backend, the old entry still resident, both snapshot rows still
+        materialized, strict-prefix rows, the new row within
+        ``prefill_len``, and the combined pending within
+        ``inject_len``. Anything else falls back to the full re-warm
+        prefill. Returns True when the entry was rekeyed in place."""
+        if not self.cfg.delta_rewarm or self.pool is not None:
+            return False
+        hf = self._handoff_from
+        if hf is None or hf[1] != new_vgen:
+            return False
+        old_vgen = hf[0]
+        rec = self.cache._entries.get((u, old_vgen))
+        if rec is None:
+            return False
+        store = self.injector.batch
+        old_rows = store.snapshot_rows(old_vgen[0], [u])
+        new_rows = store.snapshot_rows(new_vgen[0], [u])
+        if old_rows is None or new_rows is None:
+            return False
+        o_items, _, o_valid = old_rows
+        n_items, _, n_valid = new_rows
+        o = o_items[0][o_valid[0] > 0]
+        n = n_items[0][n_valid[0] > 0]
+        if len(n) < len(o) or not np.array_equal(n[:len(o)], o):
+            return False  # trimmed or rewritten row: prefix broken
+        if len(n) > self.engine.scfg.prefill_len:
+            return False  # fresh prefill would clip differently
+        d = len(n) - len(o)
+        entry = rec[0]
+        pending = list(entry.get("pending", ()))
+        if d:
+            pending += items_to_tokens(
+                n[len(o):], np.ones(d, np.int64)).tolist()
+        if len(pending) > self.engine.scfg.inject_len:
+            return False
+        if not self.cache.rekey_entry(u, old_vgen, new_vgen):
+            return False
+        if pending:
+            entry["pending"] = pending
+        else:
+            entry.pop("pending", None)
+        return True
 
     # ------------------------------------------------------------------
     def stats(self) -> GatewayStats:
@@ -1381,6 +1627,9 @@ class Gateway:
                 pending_rewarm=len(self._rewarm_queue),
             ),
             cache=self.cache.stats(),
+            model_version=self._model_version,
+            patches_applied=self._patches_applied,
+            patch_install_max_ms=self._patch_install_max_s * 1e3,
         )
 
 

@@ -1,5 +1,7 @@
 from repro.training.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
 from repro.training.losses import cross_entropy  # noqa: F401
+from repro.training.online import (  # noqa: F401
+    OnlineTrainer, OnlineTrainerConfig, WeightPatch)
 from repro.training.optimizer import (  # noqa: F401
     AdamWConfig, OptState, adamw_update, init_opt_state, lr_schedule)
 from repro.training.train_loop import (  # noqa: F401

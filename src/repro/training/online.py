@@ -1,0 +1,363 @@
+"""Online incremental trainer + hot-swappable delta weight patches.
+
+Closes the model-freshness half of the paper's comparison: the repro's
+serving stack (PRs 1-8) keeps *features* fresh via inference-time
+injection, but the weights themselves still came from a hypothetical
+daily retrain. This module is the "Near-Zero-Overhead Freshness via
+Inference-Side Model Updates" alternative — a continuous trainer that
+
+* consumes appended events from a lock-free frozen ``EventLog.view()``
+  (``LogView.events_since``: the trainer remembers the log position it
+  has trained through and each capture hands it just the new suffix);
+* builds next-item-prediction mini-batches from the recent window of
+  the users those events touched (``LogView.materialize`` — the same
+  right-aligned read the feature plane uses) and steps the existing
+  ``make_train_step``/``adamw_update`` machinery;
+* emits versioned :class:`WeightPatch` objects — *sparse per-leaf*
+  updates (full new values for the trainable leaf subset, keyed by
+  ``jax.tree_util.keystr`` path) with a ``base_version`` guard so a
+  patch can never be applied out of order, msgpack-serializable via the
+  checkpoint codec.
+
+The serving side (``Gateway.install_patch`` / ``ServingEngine.
+apply_patch``) installs a patch atomically between panes in O(patch)
+time; cached prefill states keyed to the old model version are never
+served again (the cache generation grows a model-version axis that
+composes with the snapshot-rekey machinery).
+
+Patches carry **full new leaf values**, not arithmetic diffs: adding a
+float delta on the serving side would round differently than the
+trainer's own accumulate, and the hot-swap contract is *bitwise*
+equivalence with a cold start from the patched weights. Sparsity comes
+from the trainable-leaf filter (``OnlineTrainerConfig.trainable``), the
+knob that makes a patch a delta rather than a checkpoint.
+
+Threading mirrors ``BackgroundSnapshotBuilder``: an optional daemon
+worker steps the trainer off-thread and enqueues patches; the serving
+thread drains them via ``poll_patch()`` (O(1), sticky worker errors
+re-raised there). The synchronous ``step()``/``make_patch()`` pair is
+the deterministic path tests and benchmarks drive directly.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.event_log import EventLog
+from repro.core.pipeline import items_to_tokens
+from repro.training.checkpoint import _from_doc, _to_doc
+from repro.training.optimizer import init_opt_state
+from repro.training.train_loop import TrainConfig, make_train_step
+
+DAY = 86400
+
+
+def flatten_with_keystr(tree) -> List[Tuple[str, Any]]:
+    """``(keystr path, leaf)`` pairs — the shared leaf-naming convention
+    between patch emission (here) and patch application
+    (``ServingEngine.apply_patch``)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+# ----------------------------------------------------------------------
+# WeightPatch — the wire format
+# ----------------------------------------------------------------------
+
+_PATCH_CODEC_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightPatch:
+    """A versioned sparse weight update.
+
+    ``leaves`` maps ``keystr`` leaf paths to full replacement values.
+    ``base_version`` is the model version the patch applies on top of;
+    installing onto any other version must be rejected (the guard that
+    keeps a reordered/dropped patch stream from silently corrupting the
+    served weights). ``version`` (== base_version + 1 in the stream the
+    trainer emits) is the model version the install produces.
+    """
+    version: int
+    base_version: int
+    step: int                       # trainer step count at emission
+    leaves: Dict[str, Any]          # keystr path -> ndarray
+    metadata: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.leaves)
+
+    @property
+    def n_params(self) -> int:
+        return int(sum(np.asarray(v).size for v in self.leaves.values()))
+
+    def to_bytes(self) -> bytes:
+        doc = {"codec": _PATCH_CODEC_VERSION, "version": self.version,
+               "base_version": self.base_version, "step": self.step,
+               "metadata": self.metadata,
+               "leaves": _to_doc(jax.device_get(dict(self.leaves)))}
+        return msgpack.packb(doc, use_bin_type=True)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "WeightPatch":
+        doc = msgpack.unpackb(data, raw=False, strict_map_key=False)
+        if doc.get("codec") != _PATCH_CODEC_VERSION:
+            raise ValueError(
+                f"unsupported patch codec {doc.get('codec')!r}")
+        return WeightPatch(
+            version=int(doc["version"]),
+            base_version=int(doc["base_version"]),
+            step=int(doc["step"]),
+            leaves=_from_doc(doc["leaves"]),
+            metadata=doc.get("metadata", {}))
+
+
+# ----------------------------------------------------------------------
+# OnlineTrainer
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineTrainerConfig:
+    batch_size: int = 8
+    seq_len: int = 32               # tokens per example (window read k-1)
+    window: int = 30 * DAY          # event-time lookback per example
+    min_new_events: int = 1         # suffix size required to run a step
+    steps_per_patch: int = 1        # train steps bundled into one patch
+    # keystr substrings selecting the trainable (and therefore patched)
+    # leaf subset; None trains and ships every leaf. This is the knob
+    # that makes a patch a *delta* — e.g. ("head", "embed") ships the
+    # item-embedding/head slice that online signals actually move.
+    trainable: Optional[Tuple[str, ...]] = None
+    # background worker cadence (seconds between step attempts)
+    interval_s: float = 0.05
+
+
+class OnlineTrainer:
+    """Incremental trainer over a live :class:`EventLog`.
+
+    Synchronous API (deterministic; tests/benchmarks):
+        ``step()`` consumes the appended-event suffix and runs one train
+        step (returns metrics, or ``None`` if too little new data);
+        ``make_patch()`` emits the next :class:`WeightPatch`.
+
+    Background API (production shape): ``start()`` spawns a daemon
+    worker that steps continuously and enqueues a patch every
+    ``steps_per_patch`` successful steps; the serving thread drains via
+    ``poll_patch()``. Worker exceptions are sticky and re-raised from
+    ``poll_patch()``/``stop()``.
+    """
+
+    def __init__(self, model_cfg: ModelConfig, params, log: EventLog, *,
+                 cfg: OnlineTrainerConfig = OnlineTrainerConfig(),
+                 train_cfg: Optional[TrainConfig] = None,
+                 base_version: int = 0,
+                 step_hook: Optional[Callable[[], None]] = None):
+        self.model_cfg = model_cfg
+        self.cfg = cfg
+        self.log = log
+        if train_cfg is None:
+            # the emitted weights must be dtype-identical to what the
+            # serving engine holds — bitwise swap equivalence starts here
+            leaf_dtype = jax.tree.leaves(params)[0].dtype
+            train_cfg = TrainConfig(param_dtype=leaf_dtype)
+        self.train_cfg = train_cfg
+        self._step_fn = jax.jit(make_train_step(model_cfg, train_cfg))
+        self._params = params
+        self._opt = init_opt_state(params)
+        self._version = int(base_version)
+        self._cursor = 0            # log position trained through
+        self._rr = 0                # round-robin user cursor
+        self._steps = 0
+        self._steps_at_patch = 0
+        self.history: List[Dict[str, float]] = []
+        self.step_time_s = 0.0
+        if cfg.trainable is None:
+            self._trainset = None
+        else:
+            self._trainset = {
+                k for k, _ in flatten_with_keystr(params)
+                if any(sub in k for sub in cfg.trainable)}
+            if not self._trainset:
+                raise ValueError(
+                    f"trainable filter {cfg.trainable!r} matches no "
+                    f"param leaf")
+        # background worker plumbing
+        self._step_hook = step_hook
+        self._patch_q: "collections.deque[WeightPatch]" = \
+            collections.deque()
+        self._qlock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def params(self):
+        """Current full weights (what a cold engine started 'from the
+        patched weights' must be constructed with)."""
+        return self._params
+
+    @property
+    def version(self) -> int:
+        """Model version of the *last emitted* patch (== base_version
+        until the first ``make_patch``)."""
+        return self._version
+
+    @property
+    def steps(self) -> int:
+        return self._steps
+
+    @property
+    def cursor(self) -> int:
+        return self._cursor
+
+    # ------------------------------------------------------------------
+    # synchronous path
+    # ------------------------------------------------------------------
+    def step(self) -> Optional[Dict[str, float]]:
+        """Consume the appended-event suffix and run one train step.
+
+        Returns the step metrics (floats), or ``None`` when fewer than
+        ``min_new_events`` events arrived since the last consumed
+        position (the cursor does not move) or the batch had no
+        scorable transition (cursor moves — the data was consumed, it
+        was just untrainable, e.g. all touched users have single-event
+        histories)."""
+        t0 = time.perf_counter()
+        view = self.log.view()
+        users, _items, ts = view.events_since(self._cursor)
+        if len(users) < max(self.cfg.min_new_events, 1):
+            return None
+        batch = self._build_batch(view, users, ts)
+        self._cursor = view.n_events
+        if batch is None:
+            return None
+        params, opt, metrics = self._step_fn(self._params, self._opt,
+                                             batch)
+        if self._trainset is not None:
+            params = self._merge_frozen(params, self._params)
+            opt = opt._replace(
+                master=self._merge_frozen(opt.master, self._opt.master),
+                m=self._merge_frozen(opt.m, self._opt.m),
+                v=self._merge_frozen(opt.v, self._opt.v))
+        self._params, self._opt = params, opt
+        self._steps += 1
+        out = {k: float(v) for k, v in metrics.items()}
+        self.history.append(out)
+        self.step_time_s += time.perf_counter() - t0
+        return out
+
+    def _build_batch(self, view, users: np.ndarray, ts: np.ndarray,
+                     ) -> Optional[Dict[str, np.ndarray]]:
+        """Next-item-prediction batch from the recent window of the
+        users the new events touched. Deterministic: unique users in
+        sorted order, rotated by a round-robin cursor so repeated steps
+        over a hot set cycle through it."""
+        c = self.cfg
+        uniq = np.unique(users)
+        if len(uniq) > c.batch_size:
+            r = self._rr % len(uniq)
+            uniq = np.concatenate([uniq[r:], uniq[:r]])[:c.batch_size]
+            self._rr += c.batch_size
+        hi = int(ts.max()) + 1
+        items, _t, valid = view.materialize(
+            uniq, hi - c.window, hi, c.seq_len + 1)
+        # train in the SERVING token space (item+1, pad->0): the weights
+        # this trainer ships are scored against injected histories that
+        # went through the same items_to_tokens mapping
+        toks = items_to_tokens(items, valid)
+        tokens = toks[:, :-1].astype(np.int32)
+        labels = toks[:, 1:].astype(np.int32)
+        # position j scores label j+1 given the prefix through j; rows
+        # are right-aligned so both slots valid <=> token slot valid
+        mask = (valid[:, :-1] * valid[:, 1:]).astype(np.int32)
+        if int(mask.sum()) == 0:
+            return None
+        return {"tokens": tokens, "labels": labels,
+                "valid": valid[:, :-1].astype(np.int32),
+                "loss_mask": mask}
+
+    def _merge_frozen(self, new_tree, old_tree):
+        """Restore the old leaf objects at every non-trainable path.
+
+        Grad-masking alone is not enough — AdamW's decoupled weight
+        decay moves matrix leaves even at zero gradient — so frozen
+        leaves are frozen by construction: the post-step tree simply
+        keeps the pre-step objects."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(new_tree)
+        old = jax.tree.leaves(old_tree)
+        leaves = [n if jax.tree_util.keystr(p) in self._trainset else o
+                  for (p, n), o in zip(flat, old)]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def make_patch(self, metadata: Optional[dict] = None) -> WeightPatch:
+        """Emit the next versioned patch: full current values of every
+        trainable leaf, guarded by the current base version."""
+        leaves = {k: np.asarray(jax.device_get(v))
+                  for k, v in flatten_with_keystr(self._params)
+                  if self._trainset is None or k in self._trainset}
+        patch = WeightPatch(
+            version=self._version + 1, base_version=self._version,
+            step=self._steps, leaves=leaves,
+            metadata=dict(metadata or {}, steps=self._steps))
+        self._version += 1
+        self._steps_at_patch = self._steps
+        return patch
+
+    # ------------------------------------------------------------------
+    # background worker
+    # ------------------------------------------------------------------
+    def start(self) -> "OnlineTrainer":
+        """Spawn the daemon worker. Idempotent while running."""
+        if self._thread is not None and self._thread.is_alive():
+            return self
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._work, name="online-trainer", daemon=True)
+        self._thread.start()
+        return self
+
+    def _work(self) -> None:
+        try:
+            while not self._stop.is_set():
+                stepped = self.step() is not None
+                if stepped and (self._steps - self._steps_at_patch
+                                >= self.cfg.steps_per_patch):
+                    patch = self.make_patch()
+                    with self._qlock:
+                        self._patch_q.append(patch)
+                if self._step_hook is not None:
+                    self._step_hook()
+                if not stepped:
+                    self._stop.wait(self.cfg.interval_s)
+        except BaseException as e:    # sticky: re-raised from poll_patch
+            self._error = e
+
+    def poll_patch(self) -> Optional[WeightPatch]:
+        """Next pending patch from the worker, or ``None``. O(1); never
+        blocks. Re-raises a worker exception, stickily."""
+        if self._error is not None:
+            raise RuntimeError("online trainer worker failed") \
+                from self._error
+        with self._qlock:
+            return self._patch_q.popleft() if self._patch_q else None
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        """Signal the worker to exit and join it."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+        if self._error is not None:
+            raise RuntimeError("online trainer worker failed") \
+                from self._error

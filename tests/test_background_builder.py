@@ -384,6 +384,6 @@ def test_gateway_handoff_window_evicts_stale_before_rekeyed():
     assert gw.cache.stale_evictions == 2
     assert len(gw.cache) == 10
     for u in (3, 4, 5, 6, 7):          # every rekeyed entry survived
-        assert (u, gen_b) in gw.cache
+        assert (u, (gen_b, 0)) in gw.cache
     for u in newbies:
-        assert (u, gen_b) in gw.cache
+        assert (u, (gen_b, 0)) in gw.cache

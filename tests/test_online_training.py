@@ -1,0 +1,486 @@
+"""Online incremental training + hot-swapped delta weight patches.
+
+Covers the full loop the subsystem adds: the trainer consuming appended
+events from a frozen ``EventLog.view()``, the versioned WeightPatch wire
+format, ``ServingEngine.apply_patch`` validation, the gateway's
+between-panes ``install_patch`` hot swap (bitwise-equivalent to a cold
+start from the patched weights, across every cache backend), the
+version-keyed cache invalidation that keeps stale states from ever
+serving across a swap, and the O(delta) deferred-inject re-warm
+(``ServerConfig.delta_rewarm``).
+
+Weight-patching tests build FRESH engines (never the session-cached
+``tiny_engine`` — a patch would leak mutated weights into every other
+module's fixtures).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import (DAY, FEATURE_LEN, N_ITEMS, N_USERS, make_gateway,
+                      tiny_engine, tiny_model_config)
+from repro.core.event_log import EventLog
+from repro.models.model import init_params
+from repro.serving.api import Request
+from repro.serving.engine import ServingConfig, ServingEngine
+from repro.serving.scheduler import ServerConfig
+from repro.training import OnlineTrainer, OnlineTrainerConfig, WeightPatch
+from repro.training.online import flatten_with_keystr
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig
+
+
+def _tiny_params():
+    return init_params(tiny_model_config(), jax.random.PRNGKey(0),
+                       dtype=jnp.float32)
+
+
+def _engine_with(params):
+    """A private engine this test may patch (or one cold-started from a
+    trainer's weights) on the conftest serving shape."""
+    return ServingEngine(tiny_model_config(), params, ServingConfig(
+        max_batch=4, prefill_len=32, inject_len=8, cache_capacity=64))
+
+
+def _fast_tcfg(lr=3e-2):
+    return TrainConfig(adamw=AdamWConfig(lr=lr, warmup_steps=2,
+                                         total_steps=1000),
+                       remat=False, param_dtype=jnp.float32)
+
+
+def _trainer(gw, **cfg_kw):
+    """Trainer over the gateway's own event log, starting from the
+    engine's exact served weights."""
+    return OnlineTrainer(tiny_model_config(), gw.engine.params,
+                         gw.injector.batch.log,
+                         cfg=OnlineTrainerConfig(**cfg_kw),
+                         train_cfg=_fast_tcfg())
+
+
+def _slates(tickets):
+    return (np.stack([t.response.slate for t in tickets]),
+            np.stack([t.response.scores for t in tickets]))
+
+
+def _serve(gw, users, now):
+    tk = [gw.submit(Request(user=int(u), now=int(now))) for u in users]
+    gw.flush(now)
+    return tk
+
+
+# ----------------------------------------------------------------------
+# Trainer: log consumption, learning, leaf freezing
+# ----------------------------------------------------------------------
+
+def test_trainer_consumes_log_and_learns():
+    """On a perfectly predictable stream (user u always watches item u)
+    the loss must fall decisively within a few dozen steps."""
+    log = EventLog(n_users=8)
+    tr = OnlineTrainer(tiny_model_config(), _tiny_params(), log,
+                       cfg=OnlineTrainerConfig(batch_size=8, seq_len=16,
+                                               min_new_events=8),
+                       train_cfg=_fast_tcfg())
+    t = 0
+    losses = []
+    for _ in range(30):
+        for _ in range(16):
+            log.append(t % 8, (t % 8), 1000 + t)
+            t += 1
+        m = tr.step()
+        assert m is not None and np.isfinite(m["loss"])
+        losses.append(m["loss"])
+    assert tr.steps == 30 and tr.cursor == log.n_events
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) * 0.7, losses
+
+
+def test_trainer_cursor_and_min_events():
+    log = EventLog(n_users=8)
+    tr = OnlineTrainer(tiny_model_config(), _tiny_params(), log,
+                       cfg=OnlineTrainerConfig(min_new_events=4),
+                       train_cfg=_fast_tcfg())
+    assert tr.step() is None and tr.cursor == 0     # empty log
+    for i in range(3):
+        log.append(0, i, 100 + i)
+    assert tr.step() is None and tr.cursor == 0     # below min_new_events
+    log.append(0, 7, 200)
+    assert tr.step() is not None and tr.cursor == 4  # consumed exactly
+    assert tr.step() is None and tr.cursor == 4      # nothing new
+    # enough NEW events, but every touched user has a single-event
+    # history: untrainable batch -> no step, yet the data is consumed
+    for u in (4, 5, 6, 7):
+        log.append(u, 10 + u, 300 + u)
+    assert tr.step() is None and tr.cursor == 8
+    assert tr.steps == 1
+
+
+def test_trainer_trainable_filter_freezes_leaves():
+    gw = make_gateway(engine=tiny_engine())
+    tr = _trainer(gw, trainable=("embed",))
+    before = {k: np.asarray(v).copy()
+              for k, v in flatten_with_keystr(tr.params)}
+    assert tr.step() is not None
+    after = dict(flatten_with_keystr(tr.params))
+    moved = frozen = 0
+    for k, b in before.items():
+        if "embed" in k:
+            moved += int(not np.array_equal(b, np.asarray(after[k])))
+        else:
+            # frozen by construction: bitwise the pre-step leaf
+            np.testing.assert_array_equal(b, np.asarray(after[k]))
+            frozen += 1
+    assert moved >= 1 and frozen >= 1
+    patch = tr.make_patch()
+    assert patch.n_leaves >= 1
+    assert all("embed" in k for k in patch.leaves)
+    with pytest.raises(ValueError):
+        _trainer(gw, trainable=("no_such_leaf",))
+
+
+# ----------------------------------------------------------------------
+# WeightPatch wire format
+# ----------------------------------------------------------------------
+
+def test_weight_patch_codec_roundtrip():
+    leaves = {"['a']['w']": (np.arange(12, dtype=np.float32) * 0.1
+                             ).reshape(3, 4),
+              "['b']": (jnp.arange(5, dtype=jnp.float32) * 0.3
+                        ).astype(jnp.bfloat16)}
+    p = WeightPatch(version=3, base_version=2, step=17,
+                    leaves=leaves, metadata={"note": "x"})
+    q = WeightPatch.from_bytes(p.to_bytes())
+    assert (q.version, q.base_version, q.step) == (3, 2, 17)
+    assert q.metadata["note"] == "x"
+    assert set(q.leaves) == set(leaves)
+    np.testing.assert_array_equal(np.asarray(q.leaves["['a']['w']"]),
+                                  np.asarray(leaves["['a']['w']"]))
+    assert q.leaves["['b']"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(q.leaves["['b']"])).view(np.uint16),
+        np.asarray(jax.device_get(leaves["['b']"])).view(np.uint16))
+    with pytest.raises(Exception):
+        WeightPatch.from_bytes(b"\x00junk" * 5)
+
+
+def test_engine_apply_patch_validation():
+    eng = _engine_with(_tiny_params())
+    key, leaf = flatten_with_keystr(eng.params)[0]
+    with pytest.raises(KeyError):
+        eng.apply_patch({"['nope']": np.zeros(3, np.float32)})
+    with pytest.raises(ValueError):
+        eng.apply_patch({key: np.zeros(tuple(s + 1 for s in leaf.shape),
+                                       np.float32)})
+    with pytest.raises(ValueError):
+        eng.apply_patch({key: np.zeros(leaf.shape, np.float16)})
+    assert eng.apply_patch({}) == 0
+    new_leaf = np.asarray(leaf) + 1.0
+    assert eng.apply_patch({key: new_leaf}) == 1
+    got = dict(flatten_with_keystr(eng.params))[key]
+    np.testing.assert_array_equal(np.asarray(got), new_leaf)
+
+
+# ----------------------------------------------------------------------
+# Gateway hot swap
+# ----------------------------------------------------------------------
+
+_BACKENDS = {
+    "host_lru": {},
+    "pooled": {"pool_slots": 8},
+    "continuous": {"max_wait": 0},
+    "background_build": {"background_build": True},
+}
+
+
+@pytest.mark.parametrize("backend", sorted(_BACKENDS))
+def test_hot_swap_bitwise_vs_cold_gateway(backend):
+    """After install_patch, every response must be bitwise what a COLD
+    gateway built directly from the patched weights serves — across the
+    host LRU, the paged pool, continuous batching, and the
+    background-build gateway. Old-version cache entries must never
+    contaminate a post-swap pane."""
+    kw = _BACKENDS[backend]
+    gw = make_gateway(engine=_engine_with(_tiny_params()), **kw)
+    t1 = 5 * DAY + 100
+    users = [0, 1, 2, 3, 4, 5]
+    _serve(gw, users, t1)                   # warm the old-version cache
+    gw.poll()
+
+    tr = _trainer(gw)
+    for _ in range(3):
+        tr.step()
+    assert tr.steps >= 1
+    patch = tr.make_patch()
+    assert patch.version == 1 and patch.base_version == 0
+    gw.install_patch(patch)
+
+    t2 = t1 + 300
+    tk = _serve(gw, users, t2)
+    slates, scores = _slates(tk)
+    assert all(t.response.telemetry.model_version == 1 for t in tk)
+    st = gw.stats()
+    assert st.model_version == 1 and st.patches_applied == 1
+    assert st.patch_install_max_ms > 0.0
+
+    # stale entries are unreachable: every resident key is new-version
+    assert all(g[1] == 1 for (_, g) in gw.cache._entries)
+
+    # cold start FROM the patched weights (trainer params == engine
+    # params post-install, leaf for leaf)
+    cold = make_gateway(engine=_engine_with(tr.params), **kw)
+    ck = _serve(cold, users, t2)
+    cs, csc = _slates(ck)
+    np.testing.assert_array_equal(slates, cs)
+    np.testing.assert_array_equal(scores, csc)
+
+
+def test_install_patch_base_version_guard():
+    gw = make_gateway(engine=_engine_with(_tiny_params()))
+    tr = _trainer(gw)
+    tr.step()
+    p1 = tr.make_patch()
+    p2 = tr.make_patch()           # based on version 1
+    with pytest.raises(ValueError):
+        gw.install_patch(p2)       # gateway still serves version 0
+    assert gw.stats().model_version == 0
+    gw.install_patch(p1)
+    gw.install_patch(p2)           # now in order
+    assert gw.stats().model_version == 2
+    assert gw.stats().patches_applied == 2
+    with pytest.raises(ValueError):
+        gw.install_patch(p1)       # never rewind
+
+
+def test_patch_policy_rewarm_rebuilds_under_new_version():
+    gw = make_gateway(engine=_engine_with(_tiny_params()),
+                      patch_policy="rewarm", rewarm_budget=8)
+    t1 = 5 * DAY + 100
+    users = [0, 1, 2, 3]
+    _serve(gw, users, t1)
+    tr = _trainer(gw)
+    tr.step()
+    gw.install_patch(tr.make_patch())
+    assert gw.stats().rollover.pending_rewarm == len(users)
+    pc0 = gw.prefill_calls
+    gw.tick(t1 + 60)               # budgeted re-warm between panes
+    assert gw.stats().rollover.pending_rewarm == 0
+    assert gw.prefill_calls > pc0
+    assert all(g[1] == 1 for (_, g) in gw.cache._entries)
+    # the rebuilt states serve as hits, bitwise equal to a cold gateway
+    h0 = gw.cache.hits
+    tk = _serve(gw, users, t1 + 120)
+    assert gw.cache.hits - h0 == len(users)
+    cold = make_gateway(engine=_engine_with(tr.params))
+    ck = _serve(cold, users, t1 + 120)
+    np.testing.assert_array_equal(_slates(tk)[0], _slates(ck)[0])
+    np.testing.assert_array_equal(_slates(tk)[1], _slates(ck)[1])
+
+
+def test_attach_trainer_background_install():
+    """Production shape: worker thread trains + emits, tick installs."""
+    gw = make_gateway(engine=_engine_with(_tiny_params()))
+    t1 = 5 * DAY + 100
+    _serve(gw, [0, 1], t1)
+    tr = _trainer(gw, min_new_events=1, steps_per_patch=1,
+                  interval_s=0.01)
+    gw.attach_trainer(tr)
+    tr.start()
+    try:
+        deadline = time.time() + 30.0
+        n = 0
+        while time.time() < deadline:
+            gw.tick(t1 + 60)
+            if gw.stats().patches_applied >= 1:
+                break
+            # keep feeding the stream so the worker has data to consume
+            gw.observe((n % 4, n % N_ITEMS, t1 + 200 + n))
+            n += 1
+            time.sleep(0.02)
+    finally:
+        tr.stop()
+    gw.tick(t1 + 90)               # install anything still queued
+    st = gw.stats()
+    assert st.patches_applied >= 1
+    assert st.model_version == st.patches_applied
+    assert all(t_.response.telemetry.model_version == st.model_version
+               for t_ in _serve(gw, [0, 1], t1 + DAY // 2))
+    # a mismatched trainer must be rejected at attach time
+    tr2 = _trainer(gw)
+    tr2.make_patch()               # advances tr2 to version 1
+    with pytest.raises(ValueError):
+        gw.attach_trainer(tr2)
+
+
+def test_snapshot_rollover_composes_with_model_version():
+    """The two cache-key axes are independent: a snapshot roll after a
+    patch keeps serving the patched weights, and entries from every
+    (old snapshot, old version) combo are unreachable."""
+    gw = make_gateway(engine=_engine_with(_tiny_params()),
+                      rewarm_budget=4)
+    t1 = 5 * DAY + 100
+    users = [0, 1, 2, 3]
+    _serve(gw, users, t1)
+    tr = _trainer(gw)
+    tr.step()
+    gw.install_patch(tr.make_patch())
+    _serve(gw, users, t1 + 60)     # re-admit under (gen_a, 1)
+    gw.tick(t1 + DAY)              # snapshot rolls: gen_b
+    gen_b = gw.injector.generation(t1 + DAY)
+    st = gw.stats()
+    assert st.model_version == 1
+    assert st.rollover.rollovers >= 1
+    tk = _serve(gw, users, t1 + DAY + 60)
+    assert all(t.response.telemetry.generation == gen_b
+               and t.response.telemetry.model_version == 1 for t in tk)
+    assert all(g == (gen_b, 1) for (_, g) in gw.cache._entries)
+
+
+# ----------------------------------------------------------------------
+# O(delta) re-warm (ServerConfig.delta_rewarm)
+# ----------------------------------------------------------------------
+
+def _short_history_events(n=200, seed=4, t_hi=5 * DAY):
+    """Seeded histories SHORT of feature_len, so appended events extend
+    the snapshot row as a strict prefix (no window shift)."""
+    rng = np.random.RandomState(seed)
+    return (rng.randint(0, N_USERS, n), rng.randint(0, N_ITEMS, n),
+            rng.randint(0, t_hi, n))
+
+
+def test_delta_rewarm_bitwise():
+    """The deferred-delta path must be bitwise the PRE-rollover inject
+    path (same cached state, token-for-token the same inject stream),
+    produce identical slates to a fresh-prefill gateway, and save the
+    re-warm prefills it defers."""
+    evts = _short_history_events()
+    users = [0, 1, 2, 3, 4, 5]
+    changed = [0, 1, 2]
+    t1 = 5 * DAY + 100
+    t2 = 6 * DAY + 100
+    eng = tiny_engine()            # no weight patching here: shareable
+
+    def _feed(g):
+        # two delta events (land in gen B's snapshot) + one fresh event
+        # (after gen B's cutoff) per changed user, distinct (item, ts)
+        for u in changed:
+            g.observe((u, 50 + u, 5 * DAY + 600 + u))
+            g.observe((u, 80 + u, 5 * DAY + 700 + u))
+        for u in changed:
+            g.observe((u, 120 + u, 6 * DAY + 50 + u))
+
+    # the gateway under test: delta re-warm on
+    gw = make_gateway(engine=eng, events=evts, delta_rewarm=True,
+                      rewarm_budget=8)
+    _serve(gw, users, t1)
+    _feed(gw)
+    pc0 = gw.prefill_calls
+    gw.tick(t1 + DAY)              # roll to gen B; delta re-warm runs
+    st = gw.stats().rollover
+    assert st.delta_rewarms == len(changed)
+    assert gw.prefill_calls == pc0         # zero prefills paid
+    tk = _serve(gw, users, t2)
+    assert gw.prefill_calls == pc0         # all hits, inject path
+    assert all(t.response.telemetry.cache_hit for t in tk)
+    slates, scores = _slates(tk)
+
+    # oracle 1: never-rolled gateway — the deferral IS this computation
+    nr = make_gateway(engine=eng, events=evts, run_batch_jobs=False)
+    nr.injector.batch.maybe_run_due_snapshots(t1)   # gen A only, ever
+    _serve(nr, users, t1)
+    _feed(nr)
+    nk = _serve(nr, users, t2)
+    ns, nsc = _slates(nk)
+    np.testing.assert_array_equal(slates, ns)
+    np.testing.assert_array_equal(scores, nsc)
+
+    # oracle 2: cold gateway at gen B (fresh prefill of the new rows).
+    # RoPE positions shift by the deferred-delta length, so scores agree
+    # to tolerance, not bitwise; the ranked slates must still match.
+    cold = make_gateway(engine=eng, events=evts)
+    _feed(cold)
+    cold.tick(t1 + DAY)
+    ck = _serve(cold, users, t2)
+    cs, csc = _slates(ck)
+    np.testing.assert_array_equal(slates, cs)
+    np.testing.assert_allclose(scores, csc, rtol=2e-4, atol=2e-4)
+
+
+def test_delta_rewarm_falls_back_when_row_not_prefix():
+    """A user whose history already fills feature_len shifts the
+    snapshot window at the roll — not a prefix extension — and must take
+    the full re-warm prefill instead (results still correct)."""
+    us, its, tss = _short_history_events()
+    # user 9 gets a FULL window: feature_len+4 events before gen A
+    extra_n = FEATURE_LEN + 4
+    us = np.concatenate([us, np.full(extra_n, 9)])
+    its = np.concatenate([its, np.arange(extra_n) % N_ITEMS])
+    tss = np.concatenate([tss, 4 * DAY + np.arange(extra_n)])
+    evts = (us, its, tss)
+    t1 = 5 * DAY + 100
+    eng = tiny_engine()
+    gw = make_gateway(engine=eng, events=evts, delta_rewarm=True,
+                      rewarm_budget=8)
+    _serve(gw, [9], t1)
+    gw.observe((9, 33, 5 * DAY + 600))
+    gw.tick(t1 + DAY)
+    st = gw.stats().rollover
+    assert st.delta_rewarms == 0 and st.rebuilt == 1
+    tk = _serve(gw, [9], 6 * DAY + 100)
+    cold = make_gateway(engine=eng, events=evts)
+    cold.observe((9, 33, 5 * DAY + 600))
+    cold.tick(t1 + DAY)
+    ck = _serve(cold, [9], 6 * DAY + 100)
+    np.testing.assert_array_equal(_slates(tk)[0], _slates(ck)[0])
+    np.testing.assert_array_equal(_slates(tk)[1], _slates(ck)[1])
+
+
+def test_delta_rewarm_pending_overflow_drops_to_prefill():
+    """When pending delta + the realtime suffix outgrow one inject, the
+    serve path drops the deferred entry and the row pays a full prefill
+    — bitwise the cold path, never a truncated inject."""
+    evts = _short_history_events()
+    t1 = 5 * DAY + 100
+    t2 = 6 * DAY + 200
+    eng = tiny_engine()
+    gw = make_gateway(engine=eng, events=evts, delta_rewarm=True,
+                      rewarm_budget=8)
+    _serve(gw, [0], t1)
+
+    def _feed(g):
+        for j in range(2):         # delta: extends the snapshot row
+            g.observe((0, 60 + j, 5 * DAY + 600 + j))
+    _feed(gw)
+    gw.tick(t1 + DAY)
+    assert gw.stats().rollover.delta_rewarms == 1
+
+    def _flood(g):                 # 7 fresh: 2 + 7 > inject_len=8
+        for j in range(7):
+            g.observe((0, 100 + j, 6 * DAY + 50 + j))
+    _flood(gw)
+    inv0 = gw.cache.invalidations
+    tk = _serve(gw, [0], t2)
+    assert gw.cache.invalidations == inv0 + 1      # entry dropped
+    assert tk[0].response.telemetry.path == "prefill"
+    cold = make_gateway(engine=eng, events=evts)
+    _feed(cold)
+    cold.tick(t1 + DAY)
+    _flood(cold)
+    ck = _serve(cold, [0], t2)
+    np.testing.assert_array_equal(_slates(tk)[0], _slates(ck)[0])
+    np.testing.assert_array_equal(_slates(tk)[1], _slates(ck)[1])
+
+
+def test_delta_rewarm_config_requires_host_lru():
+    with pytest.raises(ValueError):
+        ServerConfig(delta_rewarm=True, pool_slots=16)
+    with pytest.raises(ValueError):
+        ServerConfig(patch_policy="evict-all")
+
+
+def test_stats_surface_new_fields():
+    gw = make_gateway(engine=tiny_engine())
+    d = gw.stats().as_dict()
+    assert d["model_version"] == 0 and d["patches_applied"] == 0
+    assert d["patch_install_max_ms"] == 0.0
+    assert d["rollover"]["delta_rewarms"] == 0

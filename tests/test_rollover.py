@@ -280,15 +280,15 @@ def test_rollover_rekeys_unchanged_invalidates_changed():
     assert st["rekeyed"] == 5 and st["invalidated"] == 0
     assert st["retained"] == 3  # changed users' old-gen entries live on
     for u in users:
-        assert ((u, gen_b) in gw.cache) == (u not in changed_users)
+        assert ((u, (gen_b, 0)) in gw.cache) == (u not in changed_users)
 
     # the rekey invariant: rekeyed state == fresh admission, bitwise
     fresh = _gateway()
     fresh.observe_many(changed_users, [11, 12, 13], [now + 500] * 3)
     fresh.warm(users, now + DAY)
     for u in (3, 4, 7):
-        a = gw.cache._entries[(u, gen_b)][0]
-        b = fresh.cache._entries[(u, gen_b)][0]
+        a = gw.cache._entries[(u, (gen_b, 0))][0]
+        b = fresh.cache._entries[(u, (gen_b, 0))][0]
         jax.tree.map(np.testing.assert_array_equal, a, b)
 
     # and serving after the roll: unchanged users hit, changed users miss
@@ -462,7 +462,7 @@ def test_warm_step_rebuilds_invalidated_users():
     assert gw.stats()["rollover"]["pending_rewarm"] == 6
     assert len(gw.cache) == 10
     # MRU-first: users 7 and 6 were the most recently used entries
-    assert (7, gen_b) in gw.cache and (6, gen_b) in gw.cache
+    assert (7, (gen_b, 0)) in gw.cache and (6, (gen_b, 0)) in gw.cache
     for _ in range(3):
         gw.tick(now + DAY + 60)
     assert len(gw.cache) == 16

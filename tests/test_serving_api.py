@@ -328,7 +328,7 @@ def test_fresh_rows_in_mixed_pane_never_cached():
                     Request(user=1, now=now, policy="inject")])
     gw.flush(now)
     gen = gw.injector.generation(now)
-    assert (1, gen) in gw.cache and (0, gen) not in gw.cache
+    assert (1, (gen, 0)) in gw.cache and (0, (gen, 0)) not in gw.cache
 
 
 # ----------------------------------------------------------------------
@@ -560,7 +560,7 @@ def test_tick_rolls_generation_with_warm_handoff():
     assert gen_b != gen_a
     assert len(gw.cache) == 4 and gw.cache.rekeys == 4
     assert gw.cache.invalidations == 0
-    assert all(g == gen_b for (_, g) in gw.cache._entries)
+    assert all(g == (gen_b, 0) for (_, g) in gw.cache._entries)
     st = gw.stats()["rollover"]
     assert st["rollovers"] == 1 and st["rekeyed"] == 4
 

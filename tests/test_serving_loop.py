@@ -251,7 +251,7 @@ def test_generation_rollover_invalidates_cache(offset):
     assert len(srv.cache._handoff_stale) == 10
     assert r2.cache_misses == 10          # nothing served from gen A state
     # every remaining entry is either new-generation or stale-marked
-    assert all(g == gen_b or k in srv.cache._handoff_stale
+    assert all(g == (gen_b, 0) or k in srv.cache._handoff_stale
                for k in srv.cache._entries for (_, g) in [k])
 
     # oracle: a fresh identical stack (same events, same RNG stream) that

@@ -13,7 +13,7 @@ scenarios artifact must record a reproduced determinism replay, and
 every scenario row's ``slo_pass`` must agree with its own gate list).
 
 Stdlib only; exits non-zero on the first schema violation so CI fails
-loudly. Run over the repo root it validates all seven artifacts.
+loudly. Run over the repo root it validates every committed artifact.
 """
 from __future__ import annotations
 
@@ -95,6 +95,23 @@ SCHEMAS = {
                 "modes": {"eager": dict, "warm": dict,
                           "background": dict},
                 "responses_bitwise_equal": bool}}},
+    "online": {
+        "suite": str, "smoke": bool, "config": _CONFIG,
+        "results": {
+            "cadence": [{
+                "name": str, "install_every_waves": int, "policy": str,
+                "patches_applied": int, "model_version": int,
+                "rps": NUM, "hit_rate": NUM,
+                "patch_install_max_ms": NUM,
+                "patch_install_mean_ms": NUM}],
+            "swap": {"bitwise_equal": bool, "patches_applied": int,
+                     "model_version": int, "install_ms": NUM,
+                     "patch_leaves": int, "patch_params": int},
+            "drift": {"chunks": int, "drift_chunk": int,
+                      "online_loss": [NUM], "frozen_loss": [NUM],
+                      "online_post_drift_loss": NUM,
+                      "frozen_post_drift_loss": NUM,
+                      "adaptation_ratio": NUM}}},
     "scenarios": {
         "suite": str, "smoke": bool,
         "config": {"scenarios": [str]},
@@ -131,6 +148,38 @@ def semantic_checks(doc, path):
         if res.get("serving", {}).get("responses_bitwise_equal") is not True:
             errs.append(f"{path}.results.serving: modes did not serve "
                         f"bitwise-identical responses")
+    if doc.get("suite") == "online":
+        res = doc.get("results", {})
+        swap = res.get("swap", {})
+        if swap.get("bitwise_equal") is not True:
+            errs.append(f"{path}.results.swap: hot-swapped responses not "
+                        f"certified bitwise equal to a cold gateway from "
+                        f"the patched weights")
+        for i, row in enumerate(res.get("cadence", [])):
+            # a patch that "installed" without advancing the served
+            # model version is the silent-corruption case the
+            # base_version guard exists to prevent
+            if row.get("patches_applied", 0) >= 1 and \
+                    row.get("model_version", 0) < 1:
+                errs.append(f"{path}.results.cadence[{i}] "
+                            f"({row.get('name')}): patches_applied="
+                            f"{row.get('patches_applied')} but "
+                            f"model_version never advanced")
+            # the hot-swap is O(patch) BETWEEN panes: the worst single
+            # serving-thread install slice must stay tiny. Wall-clock,
+            # so gated on the committed full-size artifact only — a
+            # smoke regeneration on an arbitrary CI host measures the
+            # host, not the code
+            if not doc.get("smoke") and \
+                    row.get("patch_install_max_ms", 0.0) > 5.0:
+                errs.append(f"{path}.results.cadence[{i}] "
+                            f"({row.get('name')}): install stall "
+                            f"{row.get('patch_install_max_ms'):.2f}ms "
+                            f"exceeds the 5ms budget")
+        drift = res.get("drift", {})
+        if drift.get("adaptation_ratio", 0.0) < 1.0:
+            errs.append(f"{path}.results.drift: online post-drift loss "
+                        f"not below the frozen model's")
     if doc.get("suite") == "scenarios":
         det = doc.get("determinism", {})
         if det.get("reproducible") is not True:
