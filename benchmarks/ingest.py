@@ -1,0 +1,231 @@
+"""The ``ingest`` suite: tiered sliding-window EventLog under sustained
+production ingest.
+
+Three measurements, each asserted in-suite (the committed artifact is an
+acceptance record, not just numbers):
+
+**bounded** — sustained-rate ingest across many window rollovers with
+compaction at every boundary. Samples the retained footprint
+(``bytes_hot + bytes_warm``) at each rollover and asserts the
+steady-state trajectory is FLAT — no monotonic growth once retention
+fills — while an unbounded log over the same stream grows linearly.
+This is the memory-leak claim of the tiered refactor.
+
+**oracle** — the exactness contract, differentially: the same seeded
+stream (including post-compaction late arrivals that take the demotion
+path) through a tiered log and an unbounded oracle; every window-aligned
+in-retention ``materialize``, ``users_with_events``, position-anchored
+``changed_users``, and trainer-style ``events_since`` must be bitwise
+identical. Asserted; recorded as ``oracle_bitwise``.
+
+**churn_compact** — the production scenario: churn_heavy's regime with
+the tiered log live (sync compaction on gateway ticks, >= 3 rollovers
+mid-trace) and a slice of arrivals pinned to the model-free ``decay``
+policy arm, so panes mix engine-served and decay-served rows. Must hold
+churn_heavy's SLO contract and reproduce bit-identical slates on replay.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _bounded(smoke: bool) -> dict:
+    from repro.core.event_log import EventLog
+
+    window = 200
+    retention = 4
+    segment_k = 32
+    n_users = 256
+    per_window = 500 if smoke else 4000
+    rollovers = 8 if smoke else 12
+    hot_budget = per_window * 2
+    rng = np.random.RandomState(0)
+    log = EventLog(n_users, window=window, retention_windows=retention,
+                   segment_k=segment_k, hot_budget=hot_budget)
+    oracle = EventLog(n_users)       # the leak this PR removes
+    samples = []
+    t0 = time.perf_counter()
+    for r in range(rollovers):
+        base = r * window
+        us = rng.randint(0, n_users, per_window)
+        its = rng.randint(0, 1000, per_window)
+        tss = base + np.sort(rng.randint(0, window, per_window))
+        log.extend(us, its, tss)
+        oracle.extend(us, its, tss)
+        log.compact(base + window)
+        st = log.ingest_stats()
+        samples.append(int(st["bytes_hot"] + st["bytes_warm"]))
+    wall = time.perf_counter() - t0
+    events = rollovers * per_window
+    unbounded = int(oracle.ingest_stats()["bytes_hot"])
+
+    # the gate: once retention fills (after `retention` rollovers) the
+    # footprint must be flat across the remaining (>= 3) rollovers —
+    # neither monotone growth nor creep past a tight band
+    tail = samples[retention:]
+    assert len(tail) >= 3, "need >= 3 steady-state rollovers to gate"
+    assert not all(b > a for a, b in zip(tail, tail[1:])), \
+        f"retained bytes grew monotonically in steady state: {tail}"
+    assert max(tail) <= min(tail) * 1.3, \
+        f"steady-state footprint not flat: {tail}"
+    assert samples[-1] < unbounded, \
+        "tiered log retained more than the unbounded log"
+    st = log.ingest_stats()
+    print(f"  bounded: {events} events / {rollovers} rollovers "
+          f"retained={samples[-1]/1024:.0f}KiB "
+          f"unbounded={unbounded/1024:.0f}KiB "
+          f"({unbounded/max(samples[-1],1):.1f}x) "
+          f"rate={events/wall/1e6:.2f}M ev/s")
+    return {
+        "rollovers": rollovers, "events": events,
+        "window": window, "retention_windows": retention,
+        "segment_k": segment_k, "hot_budget": hot_budget,
+        "bytes_total_per_rollover": samples,
+        "unbounded_bytes": unbounded,
+        "bytes_ratio_vs_unbounded": round(samples[-1] / unbounded, 4),
+        "ingest_rate_events_per_s": round(events / wall, 1),
+        "steady_state_bounded": True,      # the asserts above
+        "counters": {k: int(v) for k, v in st.items()},
+    }
+
+
+def _oracle(smoke: bool) -> dict:
+    from repro.core.event_log import EventLog
+
+    window = 100
+    n_windows = 8
+    k = 16
+    n_users = 64
+    per_window = 150 if smoke else 600
+    rng = np.random.RandomState(1)
+    # retention deeper than the stream: every query is in-retention,
+    # i.e. inside the regime where the contract promises bitwise
+    log = EventLog(n_users, window=window, retention_windows=16,
+                   segment_k=24)
+    oracle = EventLog(n_users)
+    late_events = compactions = 0
+    for w in range(n_windows):
+        base = w * window
+        us = rng.randint(0, n_users, per_window)
+        its = rng.randint(0, 500, per_window)
+        tss = base + np.sort(rng.randint(0, window, per_window))
+        log.extend(us, its, tss)
+        oracle.extend(us, its, tss)
+        log.compact(base + window)
+        compactions += 1
+        # late arrivals below the fresh horizon: the demotion path
+        for _ in range(4):
+            u = int(rng.randint(n_users))
+            i = int(rng.randint(500))
+            t = int(rng.randint(0, base + window))
+            log.append(u, i, t)
+            oracle.append(u, i, t)
+            late_events += 1
+    assert log.counters["demoted"] > 0, "late events never took demotion"
+    assert log.counters["dropped_late"] == 0 and \
+        log.counters["evicted"] == 0
+
+    users = np.arange(n_users)
+    hi_t = n_windows * window
+    queries = 0
+    ok = True
+    for a in range(n_windows + 1):
+        for b in range(a + 1, n_windows + 2):   # b past the horizon too
+            lo, hi = a * window, b * window
+            got = log.materialize(users, lo, hi, k)
+            want = oracle.materialize(users, lo, hi, k)
+            ok &= all(np.array_equal(g, w) for g, w in zip(got, want))
+            ok &= np.array_equal(log.users_with_events(lo, hi),
+                                 oracle.users_with_events(lo, hi))
+            queries += 1
+    # position-anchored scans and the trainer consume primitive
+    for start in (0, log.n_events // 3, log.n_events - 5):
+        ok &= np.array_equal(
+            log.users_with_events(0, hi_t, start=start),
+            oracle.users_with_events(0, hi_t, start=start))
+        got = log.view().events_since(start)
+        want = oracle.view().events_since(start)
+        ok &= all(np.array_equal(g, w) for g, w in zip(got, want))
+        ok &= np.array_equal(
+            log.changed_users(hi_t - window, hi_t, 2 * window,
+                              since=start),
+            oracle.changed_users(hi_t - window, hi_t, 2 * window,
+                                 since=start))
+        queries += 3
+    assert ok, "tiered log diverged from the unbounded oracle"
+    print(f"  oracle: {log.n_events} events ({late_events} late, "
+          f"{log.counters['demoted']} demoted) x {queries} queries "
+          f"across {compactions} compactions: bitwise")
+    return {"events": int(log.n_events), "late_events": late_events,
+            "demoted": int(log.counters["demoted"]),
+            "compactions": compactions, "queries": queries,
+            "oracle_bitwise": bool(ok)}
+
+
+def _churn_compact(smoke: bool) -> dict:
+    from repro.serving.loadgen import get_scenario, run_scenario
+
+    spec = get_scenario("churn_compact", smoke=smoke)
+    t0 = time.perf_counter()
+    a = run_scenario(spec)[0]
+    b = run_scenario(spec, warmup=False)[0]
+    wall = time.perf_counter() - t0
+    deterministic = (a.trace_fingerprint == b.trace_fingerprint
+                     and a.slate_fingerprint == b.slate_fingerprint)
+    ing = a.gateway_stats["ingest"]
+    decay_served = int(a.metrics["paths"].get("decay", 0))
+    assert a.slo_pass, [g for g in a.gates if not g["pass"]]
+    assert deterministic, "replay diverged with compaction live"
+    assert ing["compactions"] >= 3, ing
+    assert decay_served > 0, "no decay-arm rows in the mixed panes"
+    m = a.metrics
+    print(f"  churn_compact: req={m['requests']} "
+          f"decay={decay_served} compactions={ing['compactions']} "
+          f"qd p99={m['queue_delay']['p99']:.0f}s "
+          f"{'PASS' if a.slo_pass else 'FAIL'} "
+          f"{'REPRODUCED' if deterministic else 'DIVERGED'} "
+          f"({wall:.0f}s)")
+    return {"slo_pass": bool(a.slo_pass), "deterministic": deterministic,
+            "decay_requests": decay_served,
+            "compactions": int(ing["compactions"]),
+            "trace_fingerprint": a.trace_fingerprint,
+            "slate_fingerprints": [a.slate_fingerprint,
+                                   b.slate_fingerprint],
+            "metrics": m, "ingest": ing,
+            "gates": a.gates, "wall_s": round(wall, 1)}
+
+
+def bench_ingest(smoke: bool = False, out_path: str = None):
+    print("\n== ingest (tiered sliding-window log: bounded memory, "
+          "oracle exactness, compaction under load) ==")
+    results = {"bounded": _bounded(smoke), "oracle": _oracle(smoke)}
+    results["churn_compact"] = _churn_compact(smoke)
+    if out_path is None:
+        out_path = ("BENCH_ingest_smoke.json" if smoke
+                    else "BENCH_ingest.json")
+    with open(out_path, "w") as f:
+        json.dump({"suite": "ingest", "smoke": smoke,
+                   "config": {
+                       "window": results["bounded"]["window"],
+                       "retention_windows":
+                           results["bounded"]["retention_windows"],
+                       "segment_k": results["bounded"]["segment_k"],
+                       "hot_budget": results["bounded"]["hot_budget"],
+                       "events_per_window":
+                           results["bounded"]["events"]
+                           // results["bounded"]["rollovers"],
+                       "rollovers": results["bounded"]["rollovers"]},
+                   "results": results}, f, indent=2)
+    print(f"  wrote {os.path.abspath(out_path)}")
+    return results
+
+
+if __name__ == "__main__":
+    bench_ingest(smoke="--smoke" in sys.argv)

@@ -42,6 +42,13 @@ Sections
                      the seeded trace generator, each gated on its SLO
                      contract; flash_crowd proves deadline-aware load
                      shedding bounds p99 (writes BENCH_scenarios.json)
+  ingest             tiered sliding-window EventLog under sustained
+                     ingest: bounded steady-state memory across window
+                     rollovers, bitwise exactness vs an unbounded-log
+                     oracle (late-arrival demotion included), and the
+                     churn_compact scenario — compaction live on gateway
+                     ticks with mixed engine/decay panes — holding its
+                     SLO contract (writes BENCH_ingest.json)
 """
 from __future__ import annotations
 
@@ -1658,8 +1665,10 @@ def bench_roofline():
 
 
 try:  # python -m benchmarks.run vs python benchmarks/run.py
+    from benchmarks.ingest import bench_ingest
     from benchmarks.scenarios import bench_scenarios
 except ImportError:
+    from ingest import bench_ingest
     from scenarios import bench_scenarios
 
 SECTIONS = {
@@ -1676,6 +1685,7 @@ SECTIONS = {
     "rollover": bench_rollover,
     "online": bench_online,
     "scenarios": bench_scenarios,
+    "ingest": bench_ingest,
 }
 
 
@@ -1694,7 +1704,8 @@ def main() -> None:
         if pick and name != pick:
             continue
         if name in ("feature_plane", "serving", "serving_sharded",
-                    "scheduler", "rollover", "online", "scenarios"):
+                    "scheduler", "rollover", "online", "scenarios",
+                    "ingest"):
             if not pick:  # full-size suites take minutes — run them
                 continue  # explicitly via --suite
             fn(smoke=args.smoke, out_path=args.out)

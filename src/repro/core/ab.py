@@ -55,24 +55,37 @@ DAY = 86400
 # policies (mixed-policy panes) instead of one server per arm.
 ARM_POLICIES = {"control": "batch", "treatment": "inject"}
 
+# Extended experiment including the model-free recency baseline (policy
+# "decay", Interest Clock arXiv 2404.19357). A separate mapping — NOT a
+# mutation of ARM_POLICIES — because hash_arm buckets users by the arm
+# tuple: the default two-arm assignment must stay stable across PRs.
+DECAY_ARM_POLICIES = {"control": "batch", "treatment": "inject",
+                      "decay": "decay"}
 
-def request_arm(user: int, salt: int = 0) -> str:
+
+def request_arm(user: int, salt: int = 0,
+                arms: Optional[Dict[str, str]] = None) -> str:
     """Deterministic per-request arm assignment (user-randomized, as in
-    the paper; stable across processes via :func:`hash_arm`)."""
-    return hash_arm(int(user), tuple(ARM_POLICIES), salt)
+    the paper; stable across processes via :func:`hash_arm`). ``arms``
+    selects an alternative arm->policy mapping (e.g.
+    :data:`DECAY_ARM_POLICIES`); different mappings are different
+    experiments and bucket users independently."""
+    return hash_arm(int(user), tuple(arms or ARM_POLICIES), salt)
 
 
-def arm_requests(users, now: int, salt: int = 0) -> List[Request]:
+def arm_requests(users, now: int, salt: int = 0,
+                 arms: Optional[Dict[str, str]] = None) -> List[Request]:
     """Label a wave of arrivals with their experiment arm: each request
     carries its arm's serving policy and the arm name as ``tag``, ready
     for ``Gateway.submit_many`` — control and treatment rows then
     coexist in the same fixed-shape panes, and the per-arm split is
     recovered from ``response.telemetry.tag``."""
+    arms = arms or ARM_POLICIES
     out = []
     for u in np.asarray(users).ravel():
-        arm = request_arm(int(u), salt)
+        arm = request_arm(int(u), salt, arms)
         out.append(Request(user=int(u), now=int(now),
-                           policy=ARM_POLICIES[arm], tag=arm))
+                           policy=arms[arm], tag=arm))
     return out
 
 

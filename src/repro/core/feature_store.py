@@ -40,6 +40,25 @@ DAY = 86400
 Features = Tuple[np.ndarray, np.ndarray, np.ndarray]  # items, ts, valid
 
 
+def _row_diff(prev_feats: Features, new_feats: Features, users: np.ndarray,
+              chunk: int = 65536) -> np.ndarray:
+    """Rows among ``users`` whose (items, ts, valid) triples differ
+    bitwise between two frozen feature planes. Chunked so the compare
+    never allocates a population-scale temporary — the same exact-diff
+    primitive the background builder runs off-thread and the synchronous
+    certification path runs inside the rollover clock call."""
+    pi, pt, pv = prev_feats
+    ni, nt, nv = new_feats
+    users = np.asarray(users, np.int64)
+    diffs = []
+    for s in range(0, len(users), chunk):
+        h = users[s:s + chunk]
+        d = ((ni[h] != pi[h]) | (nt[h] != pt[h])
+             | (nv[h] != pv[h])).any(axis=1)
+        diffs.append(h[d])
+    return np.concatenate(diffs) if diffs else users
+
+
 @dataclasses.dataclass(frozen=True)
 class FeatureStoreConfig:
     n_users: int
@@ -57,6 +76,19 @@ class FeatureStoreConfig:
     # ts, appended after the generation ran) are included where the frozen
     # arrays would not have had them.
     snapshot_retention: Optional[int] = 8
+    # EventLog tiering (None = legacy unbounded append-only log). With
+    # ``log_window`` set the store's log becomes the tiered sliding-
+    # window store: hot tail + per-window compacted segments + eviction
+    # past ``log_window * log_retention_windows``. ``log_segment_k``
+    # defaults to ``feature_len`` — the compaction keep-depth must be at
+    # least the materialize depth for the bitwise-exactness contract
+    # (docs/event_log.md). ``log_hot_budget`` caps hot-tail capacity in
+    # events. Whoever owns the clock (the Gateway's tick) must drive
+    # ``log.compact``.
+    log_window: Optional[int] = None
+    log_retention_windows: int = 8
+    log_segment_k: Optional[int] = None
+    log_hot_budget: Optional[int] = None
 
 
 class BatchFeatureStore:
@@ -64,7 +96,12 @@ class BatchFeatureStore:
 
     def __init__(self, cfg: FeatureStoreConfig):
         self.cfg = cfg
-        self._log = EventLog(cfg.n_users)
+        self._log = EventLog(
+            cfg.n_users, window=cfg.log_window,
+            retention_windows=cfg.log_retention_windows,
+            segment_k=(cfg.log_segment_k if cfg.log_segment_k is not None
+                       else cfg.feature_len),
+            hot_budget=cfg.log_hot_budget)
         # snapshot_ts -> (items, ts, valid) arrays
         self._snapshots: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         self._snapshot_times: List[int] = []
@@ -185,12 +222,8 @@ class BatchFeatureStore:
                 # never read the record)
                 changed = None
             else:
-                pi, pt, pv = self._snapshots[prev]
-                ni, nt, nv = feats
-                h = np.asarray(delta_hint, np.int64)
-                diff = ((ni[h] != pi[h]) | (nt[h] != pt[h])
-                        | (nv[h] != pv[h])).any(axis=1)
-                changed = h[diff]
+                changed = _row_diff(self._snapshots[prev], feats,
+                                    delta_hint)
             self._changed_vs_prev[snapshot_ts] = (prev, changed)
         self._snapshots[snapshot_ts] = feats
         self._snapshot_log_n[snapshot_ts] = self._log.n_events
@@ -204,13 +237,15 @@ class BatchFeatureStore:
 
     def changed_users_between(self, gen_a: int, gen_b: int,
                               ) -> Optional[np.ndarray]:
-        """A certified set covering every user whose feature rows differ
-        between generations ``gen_a`` and ``gen_b`` (exact when the
-        build recorded a delta, a conservative superset otherwise), or
-        ``None`` when no such set can be certified. A user absent from
-        the returned set has bitwise-identical rows at both generations
-        — the property the warm handoff's rekey rests on; extra members
-        only cost unnecessary invalidations, never correctness.
+        """The exact set of users whose feature rows differ bitwise
+        between generations ``gen_a`` and ``gen_b``, or ``None`` when no
+        such set can be certified. A user absent from the returned set
+        has bitwise-identical rows at both generations — the property
+        the warm handoff's rekey rests on. (The contract tolerates
+        supersets — extra members only cost unnecessary invalidations —
+        but every certification path now row-diffs down to the exact
+        set, including the synchronous-build path, which used to hand
+        back the raw log-scan superset.)
 
         Certification requires (1) a recorded adjacency: ``gen_b`` was
         installed with ``gen_a`` as its immediate predecessor (a
@@ -227,18 +262,22 @@ class BatchFeatureStore:
         if gen_a not in self._snapshots or gen_b not in self._snapshots:
             return None
         if rec[1] is None:
-            # synchronous build: no exact delta was recorded. Certify
-            # with the log-scan superset (entering / aging-out /
+            # synchronous build: no exact delta was recorded. Scan the
+            # log for the conservative superset (entering / aging-out /
             # appended-since-gen_a's-build — the same criterion the
-            # incremental builder's copy-forward proof rests on): one
-            # columnar pass over the event columns, far cheaper than a
-            # full-plane array compare, and this runs inside the
-            # rollover clock call
+            # incremental builder's copy-forward proof rests on), then
+            # row-diff just those rows between the two frozen planes —
+            # the background worker's exact-diff primitive. One columnar
+            # pass plus an O(superset) compare, still far cheaper than a
+            # full-plane compare, and the result is EXACT: a sync
+            # rollover invalidates no more users than an incremental one
             if gen_a not in self._snapshot_log_n:
                 return None
-            changed = self._log.changed_users(
+            superset = self._log.changed_users(
                 gen_a, gen_b, self.cfg.window,
                 since=self._snapshot_log_n[gen_a])
+            changed = _row_diff(self._snapshots[gen_a],
+                                self._snapshots[gen_b], superset)
             self._changed_vs_prev[gen_b] = (gen_a, changed)
             return changed
         return rec[1]
@@ -651,14 +690,9 @@ class BackgroundSnapshotBuilder:
             # rows against the previous generation, off-thread
             if not self.full_build and len(todo):
                 t0 = time.perf_counter()
-                pi, pt, pv = self._prev_feats
-                diffs = []
-                for s in range(0, len(todo), self._chunk):
-                    h = todo[s:s + self._chunk]
-                    d = ((self._items[h] != pi[h]) | (self._ts[h] != pt[h])
-                         | (self._valid[h] != pv[h])).any(axis=1)
-                    diffs.append(h[d])
-                self._changed_exact = np.concatenate(diffs)
+                self._changed_exact = _row_diff(
+                    self._prev_feats, (self._items, self._ts, self._valid),
+                    todo, chunk=self._chunk)
                 self._tick(t0)
             elif not self.full_build:
                 self._changed_exact = todo

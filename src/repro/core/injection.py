@@ -20,6 +20,12 @@ Policies (selected per A/B arm):
   * "inject"  — treatment: merged features injected as if batch.
   * "fresh"   — oracle upper bound / latency-ablation λ→0 limit: features
     recomputed from the full log at the request cutoff (no snapshot).
+  * "decay"   — model-free recency baseline (Interest Clock, arXiv
+    2404.19357): items scored by exponentially time-decayed event
+    weights, ``0.5 ** (age / half_life)``, summed per item over the
+    user's in-window events. The gateway serves these slates without
+    the engine; ``features`` returns the same cutoff-exact features as
+    "fresh" so :func:`decay_scores` sees every in-retention event.
 
 The injector also anchors the serving path's cache-key invariant
 (serving/scheduler.py): ``generation(now)`` names the snapshot cutoff whose
@@ -46,14 +52,35 @@ from repro.kernels.history_merge.ops import history_merge
 Features = Tuple[np.ndarray, np.ndarray, np.ndarray]  # items, ts, valid
 
 
+def decay_scores(feats: Features, now: int, half_life: int,
+                 n_items: int) -> np.ndarray:
+    """Exponential time-decay item scores from event features.
+
+    ``score[u, item] = sum over u's valid events of 0.5 ** (age /
+    half_life)`` with ``age = now - ts`` — the Interest Clock recency
+    weighting. Pure numpy on float64 with a fixed accumulation order,
+    so identical inputs give bitwise-identical scores: the decay arm's
+    slates are deterministic wherever its features are.
+    """
+    items, ts, valid = feats
+    out = np.zeros((len(items), n_items), np.float64)
+    r, c = np.nonzero(np.asarray(valid, bool))
+    w = 0.5 ** ((now - ts[r, c].astype(np.float64)) / float(half_life))
+    np.add.at(out, (r, items[r, c]), w)
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class InjectionConfig:
-    policy: str = "inject"          # batch | inject | fresh
+    policy: str = "inject"          # batch | inject | fresh | decay
     feature_len: int = 64           # output history length K
     merge_impl: str = "xla"         # xla | pallas | pallas_interpret
     # latency-ablation override: serve features as of (now - staleness)
     # computed directly from the log (policy "stale_cutoff").
     staleness: Optional[int] = None
+    # "decay" policy: event half-life in request-clock units (default
+    # one day — an event a day old carries half the weight of one now).
+    half_life: int = 86400
 
 
 class FeatureInjector:
@@ -75,7 +102,10 @@ class FeatureInjector:
             return self.batch.lookup_at_cutoff(users, now - c.staleness)
         if c.policy == "batch":
             return self.batch.lookup(users, now)
-        if c.policy == "fresh":
+        if c.policy in ("fresh", "decay"):
+            # decay shares the cutoff-exact feature path: its scoring
+            # (decay_scores) wants every in-retention event, weighted by
+            # age, with no snapshot staleness in the way.
             return self.batch.lookup_at_cutoff(users, now)
         if c.policy == "inject":
             b_items, b_ts, b_valid = self.batch.lookup(users, now)

@@ -30,7 +30,7 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-POLICIES = ("batch", "inject", "fresh")
+POLICIES = ("batch", "inject", "fresh", "decay")
 
 
 # ----------------------------------------------------------------------
@@ -117,6 +117,10 @@ class RequestTelemetry:
         non-empty fresh suffix injected (the paper's hot path);
       * ``"cached"``  — served from a cached prefill state with no
         fresh events pending (pure cache read + decode);
+      * ``"decay"``   — served model-free: the slate was ranked by
+        exponentially time-decayed event scores computed from the
+        user's cutoff-exact features (policy ``"decay"``); no engine
+        call, no cache entry;
       * ``"shed"``    — never served: the deadline-aware load-shedder
         rejected the request because its projected completion time
         exceeded its deadline (``Response.shed`` is True, the slate is
@@ -237,10 +241,14 @@ class GatewayStats:
     deadline_flushes: int
     shed: int                 # requests rejected by the load-shedder
     deadline_misses: int      # requests SERVED past their deadline
-    paths: Dict[str, int]     # "prefill" / "inject" / "cached" row counts
+    paths: Dict[str, int]     # "prefill"/"inject"/"cached"/"decay" rows
     queue_delay: Dict[str, float]  # window/p50/p99/max over recent requests
     rollover: RolloverStats
     cache: Dict[str, int]     # PrefillStateCache / PagedStateCache counters
+    # tiered EventLog ingest counters (EventLog.ingest_stats()):
+    # appended/events_hot/events_warm/bytes_hot/bytes_warm/demoted/
+    # dropped_late/trimmed/evicted/compactions/segments/hot_overflow
+    ingest: Dict[str, int] = dataclasses.field(default_factory=dict)
     model_version: int = 0    # current hot-swapped weight version
     patches_applied: int = 0  # delta weight patches installed so far
     # worst single install_patch() stall observed on the serving thread

@@ -77,8 +77,11 @@ SCENARIO_NAMES = ("diurnal", "flash_crowd", "cold_start_storm",
 
 # telemetry path -> SLO path group: "hit" is a pure cache read,
 # "fresh" a cached state + injected suffix (the paper's hot path),
-# "miss" a full batch-history prefill
-PATH_GROUPS = {"cached": "hit", "inject": "fresh", "prefill": "miss"}
+# "miss" a full batch-history prefill. The model-free "decay" path
+# reads cutoff-exact features like the fresh oracle does, so it gates
+# under the "fresh" group.
+PATH_GROUPS = {"cached": "hit", "inject": "fresh", "prefill": "miss",
+               "decay": "fresh"}
 
 
 # ----------------------------------------------------------------------
@@ -217,6 +220,13 @@ class ScenarioSpec:
     background_build: bool = False  # off-thread snapshot builds
     cache_entries: Optional[int] = None  # None -> n_users
     archs: Tuple[str, ...] = ()  # mixed_fleet: replay across these
+    # tiered EventLog knobs (None = unbounded append-only log)
+    log_window: Optional[int] = None       # hot-tail window (sim-s)
+    log_retention_windows: int = 8         # warm windows before eviction
+    log_compaction: Optional[str] = None   # None | "sync" | "background"
+    # fraction of arrivals served on the model-free "decay" policy arm
+    # (mixed-policy panes); 0 keeps existing traces byte-identical
+    decay_frac: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -307,7 +317,14 @@ def make_trace(spec: ScenarioSpec) -> Trace:
                 n_events += 1
             else:
                 u = int(_sample_users(rng, spec, 1, pool)[0])
-            ops.append(("a", u, now, now + spec.deadline_offset))
+            # decay_frac > 0 widens arrival ops to 5-tuples carrying an
+            # explicit policy; the short-circuit keeps the rng stream —
+            # and so every existing trace fingerprint — untouched when 0
+            if spec.decay_frac > 0 and rng.rand() < spec.decay_frac:
+                ops.append(("a", u, now, now + spec.deadline_offset,
+                            "decay"))
+            else:
+                ops.append(("a", u, now, now + spec.deadline_offset))
             n_arrivals += 1
     return Trace(name=spec.name, seed=spec.seed, start=spec.start,
                  horizon=spec.horizon, ops=tuple(ops),
@@ -373,7 +390,9 @@ def build_gateway(spec: ScenarioSpec, arch: Optional[str] = None,
     store = BatchFeatureStore(FeatureStoreConfig(
         n_users=spec.n_users, feature_len=spec.feature_len,
         snapshot_period=spec.snapshot_period,
-        snapshot_offset=spec.snapshot_offset))
+        snapshot_offset=spec.snapshot_offset,
+        log_window=spec.log_window,
+        log_retention_windows=spec.log_retention_windows))
     rts = RealtimeFeatureService(RealtimeConfig(
         n_users=spec.n_users, buffer_len=8, ingest_latency=0))
     if spec.prelude_events:
@@ -393,7 +412,8 @@ def build_gateway(spec: ScenarioSpec, arch: Optional[str] = None,
         shed_policy=spec.shed_policy,
         rewarm_budget=spec.rewarm_budget,
         snapshot_build_budget=spec.snapshot_build_budget,
-        background_build=spec.background_build))
+        background_build=spec.background_build,
+        log_compaction=spec.log_compaction))
     return gw
 
 
@@ -499,7 +519,8 @@ def replay(gw, trace: Trace, spec: ScenarioSpec) -> List:
             gw.observe((op[1], op[2], op[3]))
         else:
             tickets.append(gw.submit(Request(
-                user=op[1], now=op[2], deadline=op[3])))
+                user=op[1], now=op[2], deadline=op[3],
+                policy=op[4] if len(op) > 4 else None)))
     # drain at end-of-trace (not later): flush serves the queued tail
     # regardless of deadlines, whereas jumping the clock further would
     # manufacture sheds the traffic never caused
@@ -604,6 +625,29 @@ def get_scenario(name: str, smoke: bool = False) -> ScenarioSpec:
             slo=SLOContract(queue_delay_p50=4, queue_delay_p99=10,
                             max_deadline_miss_rate=0.0, max_shed_rate=0.0,
                             wall_ms_p99=_WALL_BUDGETS["churn_heavy"]))
+    if name == "churn_compact":
+        # churn_heavy's regime with the tiered EventLog live: a small
+        # hot window compacted synchronously on gateway ticks (>= 3
+        # rollovers per trace), plus a slice of arrivals pinned to the
+        # model-free decay arm so panes mix engine and decay rows.
+        # Not in SCENARIO_NAMES: it rides the ``ingest`` bench suite,
+        # not the scenario suite, so committed scenario baselines keep
+        # their fingerprints.
+        h = 400 if smoke else 1200
+        start = 5 * DAY + 100
+        period = h
+        return ScenarioSpec(
+            name=name, kind="steady", horizon=h, n_users=192,
+            seed=19, start=start, base_rate=0.5,
+            event_rate=1.5, churn_frac=0.8, rewarm_budget=4,
+            snapshot_period=period,
+            snapshot_offset=(start + h // 2) % period,
+            prelude_ts=(start - h, start - h // 2),
+            log_window=h // 4, log_retention_windows=40,
+            log_compaction="sync", decay_frac=0.25,
+            slo=SLOContract(queue_delay_p50=4, queue_delay_p99=10,
+                            max_deadline_miss_rate=0.0, max_shed_rate=0.0,
+                            wall_ms_p99=_WALL_BUDGETS["churn_compact"]))
     if name == "mixed_fleet":
         h = 200 if smoke else 600
         return ScenarioSpec(
@@ -633,5 +677,6 @@ _WALL_BUDGETS = {
     "flash_crowd": {"hit": 250.0, "fresh": 250.0, "miss": 500.0},
     "cold_start_storm": {"hit": 250.0, "fresh": 250.0, "miss": 600.0},
     "churn_heavy": {"hit": 300.0, "fresh": 250.0, "miss": 400.0},
+    "churn_compact": {"hit": 300.0, "fresh": 250.0, "miss": 400.0},
     "mixed_fleet": {"hit": 4500.0, "fresh": 450.0, "miss": 4500.0},
 }

@@ -320,6 +320,13 @@ class PagedStateCache:
         self.shards = pool.data_shards
         self._entries: "OrderedDict[Tuple[int, int], int]" = OrderedDict()
         self._free: deque = deque(range(pool.n_slots))
+        # host-side pending-inject sidecar for the O(delta) re-warm: the
+        # deferred snapshot-delta tokens ride NEXT TO the slot table
+        # (token lists are host metadata; the device slot itself is the
+        # untouched old-generation prefill state). Keys mirror _entries
+        # and are pruned wherever an entry dies, so a recycled slot can
+        # never inherit a previous tenant's pending tokens.
+        self._pending: Dict[Tuple[int, int], list] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -378,6 +385,7 @@ class PagedStateCache:
                 f"no allocatable slot: all {self.pool.n_slots} slots are "
                 f"pinned by the pane under assembly")
         slot = self._entries.pop(victim)
+        self._pending.pop(victim, None)
         self.evictions += 1
         return slot
 
@@ -386,6 +394,9 @@ class PagedStateCache:
         entry under slot pressure) and insert it most-recently-used.
         The caller scatters the state into the returned slot."""
         old = self._entries.pop((user, gen), None)
+        # a fresh admission overwrites the slot contents: any deferred
+        # delta attached to the previous entry is superseded
+        self._pending.pop((user, gen), None)
         slot = old if old is not None else self._alloc(pinned)
         self._entries[(user, gen)] = slot
         return slot
@@ -405,6 +416,7 @@ class PagedStateCache:
         stale = [k for k in self._entries if k[1] != gen]
         for k in stale:
             self._free.append(self._entries.pop(k))
+            self._pending.pop(k, None)
         self.invalidations += len(stale)
         self._handoff_stale = {k for k in self._handoff_stale
                                if k in self._entries}
@@ -422,17 +434,25 @@ class PagedStateCache:
         changed_set = {int(u) for u in np.asarray(changed).ravel()}
         live_new = {u for (u, g) in self._entries if g == new_gen}
         out: "OrderedDict[Tuple[int, int], int]" = OrderedDict()
+        pend: Dict[Tuple[int, int], list] = {}
         stale: set = set()
         rekeyed = invalidated = 0
         for (u, g), slot in self._entries.items():
+            p = self._pending.get((u, g))
             if g == new_gen:
                 out[(u, g)] = slot
+                if p is not None:
+                    pend[(u, g)] = p
             elif g == old_gen and u not in live_new:
                 if u not in changed_set:
                     out[(u, new_gen)] = slot
+                    if p is not None:
+                        pend[(u, new_gen)] = p
                     rekeyed += 1
                 elif retain_changed:
                     out[(u, g)] = slot
+                    if p is not None:
+                        pend[(u, g)] = p
                     stale.add((u, g))
                 else:
                     self._free.append(slot)
@@ -441,10 +461,74 @@ class PagedStateCache:
                 self._free.append(slot)
                 invalidated += 1
         self._entries = out
+        self._pending = pend
         self._handoff_stale = stale
         self.rekeys += rekeyed
         self.invalidations += invalidated
         return rekeyed, invalidated
+
+    def rekey_entry(self, user: int, old_gen, new_gen) -> bool:
+        """Rename ONE entry ``(user, old_gen)`` -> ``(user, new_gen)``
+        in place — the slot-table twin of
+        ``PrefillStateCache.rekey_entry`` (same O(delta) re-warm caller,
+        same certification contract). A dict-key rename: the device
+        arrays never move. An existing ``new_gen`` entry for the user is
+        replaced (its slot returns to the free list). Pending-inject
+        tokens follow the renamed key. Returns False when no
+        ``(user, old_gen)`` entry exists."""
+        slot = self._entries.pop((user, old_gen), None)
+        if slot is None:
+            return False
+        prev = self._entries.pop((user, new_gen), None)
+        if prev is not None:
+            self._free.append(prev)
+            self._pending.pop((user, new_gen), None)
+        self._entries[(user, new_gen)] = slot
+        self._entries.move_to_end((user, new_gen))
+        p = self._pending.pop((user, old_gen), None)
+        if p is not None:
+            self._pending[(user, new_gen)] = p
+        self._handoff_stale.discard((user, old_gen))
+        self.rekeys += 1
+        return True
+
+    def drop(self, user: int, gen) -> bool:
+        """Invalidate one entry (serve-time fallback when a deferred
+        delta no longer fits the inject budget). The slot returns to the
+        free list untouched. Returns False when absent."""
+        slot = self._entries.pop((user, gen), None)
+        if slot is None:
+            return False
+        self._free.append(slot)
+        self._pending.pop((user, gen), None)
+        self._handoff_stale.discard((user, gen))
+        self.invalidations += 1
+        return True
+
+    # ------------------------------------------------------------------
+    # Backend-neutral delta-rewarm surface (mirrored by PrefillStateCache)
+    # ------------------------------------------------------------------
+
+    def has_entry(self, user: int, gen) -> bool:
+        """Membership probe with NO side effects — no LRU bump, no
+        hit/miss counters (``lookup`` counts; this peeks)."""
+        return (user, gen) in self._entries
+
+    def get_pending(self, user: int, gen) -> Optional[list]:
+        """The entry's deferred-inject token list, or None."""
+        return self._pending.get((user, gen))
+
+    def set_pending(self, user: int, gen, tokens) -> None:
+        """Attach (or, with an empty list, clear) the entry's deferred
+        snapshot-delta tokens. Raises KeyError when the entry is absent
+        — pending tokens without a state to defer onto are a bug."""
+        if (user, gen) not in self._entries:
+            raise KeyError(f"no entry ({user}, {gen}) to attach pending "
+                           f"inject tokens to")
+        if tokens:
+            self._pending[(user, gen)] = list(tokens)
+        else:
+            self._pending.pop((user, gen), None)
 
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,

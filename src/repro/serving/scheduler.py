@@ -93,7 +93,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
-from repro.core.injection import FeatureInjector
+from repro.core.injection import FeatureInjector, decay_scores
 from repro.core.pipeline import items_to_tokens
 from repro.serving.api import (POLICIES, GatewayStats, Request,
                                RequestTelemetry, Response, RolloverStats,
@@ -307,6 +307,36 @@ class PrefillStateCache:
         self.invalidations += 1
         return True
 
+    # ------------------------------------------------------------------
+    # Backend-neutral delta-rewarm surface (mirrored by PagedStateCache:
+    # here pending tokens live inside the host entry dict, there in a
+    # host-side sidecar next to the slot table — the gateway only ever
+    # talks to these three methods, so the serve path cannot care which)
+    # ------------------------------------------------------------------
+
+    def has_entry(self, user: int, gen) -> bool:
+        """Membership probe with NO side effects — no LRU bump, no
+        hit/miss counters (``get`` counts; this peeks)."""
+        return (user, gen) in self._entries
+
+    def get_pending(self, user: int, gen) -> Optional[list]:
+        """The entry's deferred-inject token list, or None."""
+        rec = self._entries.get((user, gen))
+        return rec[0].get("pending") if rec is not None else None
+
+    def set_pending(self, user: int, gen, tokens) -> None:
+        """Attach (or, with an empty list, clear) the entry's deferred
+        snapshot-delta tokens. Raises KeyError when the entry is absent
+        — pending tokens without a state to defer onto are a bug."""
+        rec = self._entries.get((user, gen))
+        if rec is None:
+            raise KeyError(f"no entry ({user}, {gen}) to attach pending "
+                           f"inject tokens to")
+        if tokens:
+            rec[0]["pending"] = list(tokens)
+        else:
+            rec[0].pop("pending", None)
+
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._entries), "hits": self.hits,
                 "misses": self.misses, "evictions": self.evictions,
@@ -400,7 +430,11 @@ class ServerConfig:
     patch_policy: str = "purge"   # "purge" | "rewarm": cache policy at a
     #                               weight-patch install (see install_patch)
     delta_rewarm: bool = False    # O(delta) re-warm via deferred inject
-    #                               (host LRU only; see _try_delta_rewarm)
+    #                               (host LRU or paged pool; see
+    #                               _try_delta_rewarm)
+    log_compaction: Optional[str] = None  # None | "sync" | "background":
+    #                               tick-driven tiered-EventLog window
+    #                               compaction (needs a windowed log)
 
     def __post_init__(self):
         if self.snapshot_build_budget is not None \
@@ -453,12 +487,13 @@ class ServerConfig:
                 f"unknown patch_policy {self.patch_policy!r}; expected "
                 f"'purge' (drop version-stale entries at a weight-patch "
                 f"install) or 'rewarm' (queue them for budgeted re-warm)")
-        if self.delta_rewarm and self.pool_slots is not None:
+        if self.log_compaction not in (None, "sync", "background"):
             raise ValueError(
-                "delta_rewarm needs the host LRU: pool slots are "
-                "fixed-shape device states, so a deferred-delta entry "
-                "(old-generation state + pending inject tokens) cannot "
-                "live in the paged pool — unset pool_slots")
+                f"unknown log_compaction {self.log_compaction!r}; "
+                f"expected None (no tick-driven compaction), 'sync' "
+                f"(compact inline on the tick that finds a window due) "
+                f"or 'background' (off-thread BackgroundCompactor, "
+                f"polled/installed on ticks)")
 
 
 # ----------------------------------------------------------------------
@@ -519,6 +554,7 @@ class Gateway:
         self._next_id = 0
         # incremental daily job (snapshot_build_budget mode)
         self._builder = None          # in-flight SnapshotBuilder, or None
+        self._compactor = None        # BackgroundCompactor, lazily created
         self._skip_register: List[int] = []  # past-retention boundaries,
         #                               registered when the build installs
         self._rewarm_queue: deque = deque()  # users invalidated at handoff
@@ -531,7 +567,8 @@ class Gateway:
         self.shed = 0             # requests rejected by the load-shedder
         self.deadline_misses = 0  # requests served past their deadline
         self._busy_until = 0      # service model: sim-time the server frees
-        self._path_counts = {"prefill": 0, "inject": 0, "cached": 0}
+        self._path_counts = {"prefill": 0, "inject": 0, "cached": 0,
+                             "decay": 0}
         self._queue_delays: deque = deque(maxlen=4096)
         self._deadline_flushes = 0
         self._rollover = {"rollovers": 0, "rekeyed": 0, "invalidated": 0,
@@ -850,6 +887,8 @@ class Gateway:
         self._advance(now)
         self._maybe_install_patches()
         self._sync_generation(self._clock)
+        if self.cfg.log_compaction is not None:
+            self._step_compaction(self._clock)
         served: List[Ticket] = []
         if self._deadline_due():
             self._deadline_flushes += 1
@@ -859,6 +898,34 @@ class Gateway:
         if self.cfg.rewarm_budget:
             self.warm_step(self.cfg.rewarm_budget)
         return served
+
+    def _step_compaction(self, now: Optional[int]) -> None:
+        """Tick-driven tiered-log maintenance (``log_compaction``):
+        fold elapsed hot-tail windows into warm segments and evict past
+        retention, bounding ingest memory. ``"sync"`` compacts inline on
+        the tick that finds a window due; ``"background"`` starts an
+        off-thread :class:`~repro.core.event_log.BackgroundCompactor`
+        build and installs it on a later tick's O(1) poll — either way
+        installation happens here, between panes, so no pane ever reads
+        a half-swapped tail. The attached trainer's cursor rides along
+        as ``keep_from``: events it has not consumed yet are pinned in
+        the hot tail (never trimmed or evicted under it), which is what
+        keeps ``events_since`` gapless across compaction."""
+        log = self.injector.batch._log
+        if now is None or log.window is None:
+            return
+        keep_from = (self._trainer.cursor
+                     if self._trainer is not None else None)
+        if self.cfg.log_compaction == "background":
+            if self._compactor is None:
+                from repro.core.event_log import BackgroundCompactor
+                self._compactor = BackgroundCompactor(log)
+            if self._compactor.active:
+                self._compactor.poll()
+            elif log.compaction_due(int(now)):
+                self._compactor.start(int(now), keep_from=keep_from)
+        elif log.compaction_due(int(now)):
+            log.compact(int(now), keep_from=keep_from)
 
     # ------------------------------------------------------------------
     # Submission
@@ -1058,7 +1125,9 @@ class Gateway:
     # ------------------------------------------------------------------
 
     def _row_cacheable(self, policy: str) -> bool:
-        return self.cfg.use_cache and policy != "fresh"
+        # "fresh" histories move with the serve clock (cache-key
+        # invariant); "decay" rows never build an engine state at all
+        return self.cfg.use_cache and policy not in ("fresh", "decay")
 
     def _policy_of(self, req: Request) -> str:
         return req.policy or self.injector.cfg.policy
@@ -1173,9 +1242,94 @@ class Gateway:
         now = int(self._clock)  # serve-time feature clock for the pane
         policies = [self._policy_of(r) for r in reqs]
         slate_lens = [r.slate_len or self.cfg.slate_len for r in reqs]
-        suffix = self._suffixes(reqs, policies, now)
-        cacheable = [self._row_cacheable(p) for p in policies]
-        if self.cfg.delta_rewarm and self.pool is None:
+        # per-pane-row results, scattered by the policy branches below
+        row_slate: List[Optional[np.ndarray]] = [None] * len(reqs)
+        row_scores: List[Optional[np.ndarray]] = [None] * len(reqs)
+        hit_all = [False] * len(reqs)
+        path_all = [""] * len(reqs)
+
+        # "decay" rows are served model-free (no engine state, no cache
+        # entry): slates ranked by exponentially time-decayed event
+        # scores over the row's cutoff-exact features. Carved out here
+        # so the engine pane below only carries model-scored rows —
+        # rows are independent, so the split cannot change any result.
+        drows = [i for i, p in enumerate(policies) if p == "decay"]
+        if drows:
+            self._serve_decay(reqs, drows, slate_lens, now,
+                              row_slate, row_scores, path_all)
+        erows = [i for i, p in enumerate(policies) if p != "decay"]
+        if erows:
+            self._serve_engine(reqs, erows, policies, slate_lens, gen, now,
+                               row_slate, row_scores, hit_all, path_all)
+
+        # service model: with pane_service_time set, this pane occupies
+        # the server for `cost` sim-seconds past whenever it frees up —
+        # completion times (and therefore queue delays and deadline
+        # misses) account for the backlog, not just the flush clock
+        cost = self.cfg.pane_service_time
+        if cost is None:
+            done_at = int(self._clock)
+        else:
+            self._busy_until = max(self._busy_until, int(self._clock)) + cost
+            done_at = self._busy_until
+        wall = time.perf_counter()
+        for i, (t, pol) in enumerate(zip(pane, policies)):
+            tel = RequestTelemetry(
+                request_id=t.request_id, user=t.request.user, policy=pol,
+                slate_len=slate_lens[i], pane_id=pane_id,
+                # clamped at 0: the deprecated legacy shim rewinds the
+                # otherwise-monotonic clock for non-monotonic serve(now)
+                # replays, and a pending request from a later wave would
+                # otherwise record a negative delay and pollute the
+                # stats() queue-delay percentiles
+                queue_delay=max(0, int(done_at - t.request.now)),
+                cache_hit=hit_all[i], path=path_all[i], generation=gen[0],
+                submitted_at=t.request.now, served_at=done_at,
+                tag=t.request.tag, model_version=gen[1])
+            t.response = Response(slate=row_slate[i], scores=row_scores[i],
+                                  telemetry=tel)
+            t.completed_wall = wall
+            if t.request.deadline is not None \
+                    and done_at > t.request.deadline:
+                self.deadline_misses += 1
+            self._path_counts[path_all[i]] += 1
+            self._queue_delays.append(tel.queue_delay)
+        self._completed.extend(pane)  # rows retire -> claimable via poll()
+        self.requests += len(pane)
+
+    def _serve_decay(self, reqs: Sequence[Request], rows: Sequence[int],
+                     slate_lens: Sequence[int], now: int,
+                     row_slate: List, row_scores: List,
+                     path_all: List[str]) -> None:
+        """Model-free serving for policy "decay": one cutoff-exact
+        feature lookup for the pane's decay rows, per-item scores
+        ``sum(0.5 ** (age / half_life))``, slate = highest-scoring
+        distinct items (ties broken item-ascending — the stable argsort
+        over negated scores — so slates are deterministic wherever the
+        features are)."""
+        users = np.asarray([reqs[i].user for i in rows], np.int64)
+        feats = self.injector.batch.lookup_at_cutoff(users, now)
+        sc = decay_scores(feats, now, self.injector.cfg.half_life,
+                          self.engine.cfg.vocab_size)
+        for j, i in enumerate(rows):
+            order = np.argsort(-sc[j], kind="stable")
+            row_slate[i] = order[:slate_lens[i]].astype(np.int32)
+            row_scores[i] = sc[j].astype(np.float32)
+            path_all[i] = "decay"
+
+    def _serve_engine(self, reqs: Sequence[Request], rows: Sequence[int],
+                      policies: Sequence[str], slate_lens: Sequence[int],
+                      gen: Tuple[int, int], now: int,
+                      row_slate: List, row_scores: List,
+                      hit_all: List[bool], path_all: List[str]) -> None:
+        """The model-scored pane body (every non-"decay" row)."""
+        eng = self.engine
+        ereqs = [reqs[i] for i in rows]
+        epol = [policies[i] for i in rows]
+        elens = [slate_lens[i] for i in rows]
+        suffix = self._suffixes(ereqs, epol, now)
+        cacheable = [self._row_cacheable(p) for p in epol]
+        if self.cfg.delta_rewarm:
             # deferred-delta entries (O(delta) re-warm): the snapshot
             # delta the entry skipped at rekey time rides ahead of the
             # row's realtime suffix in the SAME inject — token-for-token
@@ -1183,13 +1337,12 @@ class Gateway:
             # entry is read-only (states are never written back), so the
             # pending tokens stay attached until the entry is evicted or
             # the next handoff sweeps it. Peek without touching LRU
-            # order or hit/miss counters; _lookup_or_admit probes next.
+            # order or hit/miss counters; the cache probe happens next.
             cap = eng.scfg.inject_len
-            for i, (req, can) in enumerate(zip(reqs, cacheable)):
+            for i, (req, can) in enumerate(zip(ereqs, cacheable)):
                 if not can:
                     continue
-                rec = self.cache._entries.get((req.user, gen))
-                pending = rec[0].get("pending") if rec is not None else None
+                pending = self.cache.get_pending(req.user, gen)
                 if not pending:
                     continue
                 combined = list(pending) + suffix[i]
@@ -1213,7 +1366,7 @@ class Gateway:
             # depend on which pane composition served it (the
             # continuous scheduler's partial panes must be bitwise
             # equal to the wave path's mixed panes).
-            hists = self._histories(reqs, policies, now)
+            hists = self._histories(ereqs, epol, now)
             p = eng.scfg.prefill_len
             streams = [h[-p:] + s for h, s in zip(hists, suffix)]
             buf = p + (eng.scfg.inject_len if any(suffix) else 0)
@@ -1221,15 +1374,15 @@ class Gateway:
             state = eng.prefill(toks, valid)
             self.prefill_calls += 1
             first = state["logits"][:, -1]
-            hit_flags = [False] * len(reqs)
-            paths = ["prefill"] * len(reqs)
+            hit_flags = [False] * len(ereqs)
+            paths = ["prefill"] * len(ereqs)
         else:
             if self.pool is not None:
                 state, last, hit_flags = self._assemble_pool(
-                    reqs, policies, cacheable, gen, now)
+                    ereqs, epol, cacheable, gen, now)
             else:
                 entries, hit_flags = self._lookup_or_admit(
-                    reqs, policies, cacheable, gen, now)
+                    ereqs, epol, cacheable, gen, now)
                 state = _cat_rows(entries, eng.scfg.max_batch)
                 last = np.stack([e["last_logits"] for e in _pad_list(
                     entries, eng.scfg.max_batch)])
@@ -1248,42 +1401,13 @@ class Gateway:
             paths = ["prefill" if not h else ("inject" if s else "cached")
                      for h, s in zip(hit_flags, suffix)]
 
-        slate, max_len = self._decode(state, first, slate_lens)
+        slate, _ = self._decode(state, first, elens)
         scores = np.asarray(first, np.float32)
-        # service model: with pane_service_time set, this pane occupies
-        # the server for `cost` sim-seconds past whenever it frees up —
-        # completion times (and therefore queue delays and deadline
-        # misses) account for the backlog, not just the flush clock
-        cost = self.cfg.pane_service_time
-        if cost is None:
-            done_at = int(self._clock)
-        else:
-            self._busy_until = max(self._busy_until, int(self._clock)) + cost
-            done_at = self._busy_until
-        wall = time.perf_counter()
-        for i, (t, pol) in enumerate(zip(pane, policies)):
-            tel = RequestTelemetry(
-                request_id=t.request_id, user=t.request.user, policy=pol,
-                slate_len=slate_lens[i], pane_id=pane_id,
-                # clamped at 0: the deprecated legacy shim rewinds the
-                # otherwise-monotonic clock for non-monotonic serve(now)
-                # replays, and a pending request from a later wave would
-                # otherwise record a negative delay and pollute the
-                # stats() queue-delay percentiles
-                queue_delay=max(0, int(done_at - t.request.now)),
-                cache_hit=hit_flags[i], path=paths[i], generation=gen[0],
-                submitted_at=t.request.now, served_at=done_at,
-                tag=t.request.tag, model_version=gen[1])
-            t.response = Response(slate=slate[i, :slate_lens[i]].copy(),
-                                  scores=scores[i].copy(), telemetry=tel)
-            t.completed_wall = wall
-            if t.request.deadline is not None \
-                    and done_at > t.request.deadline:
-                self.deadline_misses += 1
-            self._path_counts[paths[i]] += 1
-            self._queue_delays.append(tel.queue_delay)
-        self._completed.extend(pane)  # rows retire -> claimable via poll()
-        self.requests += len(pane)
+        for j, i in enumerate(rows):
+            row_slate[i] = slate[j, :elens[j]].copy()
+            row_scores[i] = scores[j].copy()
+            hit_all[i] = hit_flags[j]
+            path_all[i] = paths[j]
 
     def _decode(self, state: Dict[str, Any], first_logits,
                 slate_lens: Sequence[int]) -> Tuple[np.ndarray, int]:
@@ -1492,7 +1616,8 @@ class Gateway:
         the byte budget is full — warming past either budget would
         prefill states that LRU-evict before they serve."""
         users = np.asarray(users, np.int64).ravel()[:self.cache.budget]
-        if not self.cfg.use_cache or self.injector.cfg.policy == "fresh":
+        if not self.cfg.use_cache \
+                or self.injector.cfg.policy in ("fresh", "decay"):
             return 0
         self._advance(now)
         gen = self._sync_generation(now)
@@ -1511,7 +1636,8 @@ class Gateway:
             budget = self.cfg.rewarm_budget
         if budget <= 0 or not self._rewarm_queue:
             return 0
-        if not self.cfg.use_cache or self.injector.cfg.policy == "fresh" \
+        if not self.cfg.use_cache \
+                or self.injector.cfg.policy in ("fresh", "decay") \
                 or self._clock is None:
             return 0
         gen = self._gen
@@ -1552,20 +1678,23 @@ class Gateway:
         and scores are bitwise what serving across no rollover yields.
 
         Qualifies only inside the certified handoff window
-        (``_handoff_from``), same model version on both sides, host LRU
-        backend, the old entry still resident, both snapshot rows still
-        materialized, strict-prefix rows, the new row within
-        ``prefill_len``, and the combined pending within
-        ``inject_len``. Anything else falls back to the full re-warm
-        prefill. Returns True when the entry was rekeyed in place."""
-        if not self.cfg.delta_rewarm or self.pool is not None:
+        (``_handoff_from``), same model version on both sides, the old
+        entry still resident, both snapshot rows still materialized,
+        strict-prefix rows, the new row within ``prefill_len``, and the
+        combined pending within ``inject_len``. Anything else falls
+        back to the full re-warm prefill. Works identically on the host
+        LRU and the paged pool through the backend-neutral
+        ``has_entry``/``get_pending``/``set_pending`` surface — a pool
+        rekey renames a slot-table key and parks the pending tokens in
+        the table's host-side sidecar; the device state never moves.
+        Returns True when the entry was rekeyed in place."""
+        if not self.cfg.delta_rewarm:
             return False
         hf = self._handoff_from
         if hf is None or hf[1] != new_vgen:
             return False
         old_vgen = hf[0]
-        rec = self.cache._entries.get((u, old_vgen))
-        if rec is None:
+        if not self.cache.has_entry(u, old_vgen):
             return False
         store = self.injector.batch
         old_rows = store.snapshot_rows(old_vgen[0], [u])
@@ -1581,8 +1710,7 @@ class Gateway:
         if len(n) > self.engine.scfg.prefill_len:
             return False  # fresh prefill would clip differently
         d = len(n) - len(o)
-        entry = rec[0]
-        pending = list(entry.get("pending", ()))
+        pending = list(self.cache.get_pending(u, old_vgen) or ())
         if d:
             pending += items_to_tokens(
                 n[len(o):], np.ones(d, np.int64)).tolist()
@@ -1590,10 +1718,7 @@ class Gateway:
             return False
         if not self.cache.rekey_entry(u, old_vgen, new_vgen):
             return False
-        if pending:
-            entry["pending"] = pending
-        else:
-            entry.pop("pending", None)
+        self.cache.set_pending(u, new_vgen, pending)
         return True
 
     # ------------------------------------------------------------------
@@ -1627,6 +1752,7 @@ class Gateway:
                 pending_rewarm=len(self._rewarm_queue),
             ),
             cache=self.cache.stats(),
+            ingest=self.injector.batch._log.ingest_stats(),
             model_version=self._model_version,
             patches_applied=self._patches_applied,
             patch_install_max_ms=self._patch_install_max_s * 1e3,

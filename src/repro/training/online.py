@@ -177,6 +177,8 @@ class OnlineTrainer:
         self._opt = init_opt_state(params)
         self._version = int(base_version)
         self._cursor = 0            # log position trained through
+        self.missed_events = 0      # consumed-range events the tiered
+        #                             log no longer held (see step())
         self._rr = 0                # round-robin user cursor
         self._steps = 0
         self._steps_at_patch = 0
@@ -236,8 +238,22 @@ class OnlineTrainer:
         histories)."""
         t0 = time.perf_counter()
         view = self.log.view()
+        # gate on appended POSITIONS, not retained rows: identical
+        # untiered, but a tiered log may have lost part of the suffix
+        # (see missed_events below) and the hole must still be consumed
+        if view.n_events - self._cursor < max(self.cfg.min_new_events, 1):
+            return None
         users, _items, ts = view.events_since(self._cursor)
-        if len(users) < max(self.cfg.min_new_events, 1):
+        # Tiered-log accounting: positions in [cursor, n_events) the
+        # composite view no longer holds were dropped late, trimmed by
+        # window compaction, or evicted past retention before this step
+        # consumed them. A gateway-driven compaction pins positions >=
+        # the trainer cursor (keep_from), so this stays 0 there; it
+        # counts real losses when compaction runs uncoordinated.
+        self.missed_events += \
+            int(view.n_events - self._cursor) - len(users)
+        if len(users) == 0:
+            self._cursor = view.n_events
             return None
         batch = self._build_batch(view, users, ts)
         self._cursor = view.n_events

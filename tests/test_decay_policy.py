@@ -1,0 +1,122 @@
+"""The ``decay`` injection-policy arm: exponential time-decay item
+scores (per-window half-life recency weighting, Interest Clock style)
+served model-free through the full Gateway path, in mixed-policy panes
+next to engine-served rows.
+"""
+import numpy as np
+
+from conftest import DAY, make_gateway, tiny_engine
+from repro.core.ab import ARM_POLICIES, DECAY_ARM_POLICIES, request_arm
+from repro.core.injection import decay_scores
+from repro.serving.api import POLICIES, Request
+
+T1 = 5 * DAY + 100
+
+
+def _serve(gw, users, now, policy=None):
+    tk = [gw.submit(Request(user=int(u), now=now, policy=policy))
+          for u in users]
+    gw.flush(now)
+    return tk
+
+
+def test_decay_scores_formula():
+    items = np.array([[3, 7, 3], [0, 0, 5]], np.int32)
+    ts = np.array([[10, 20, 30], [0, 0, 40]], np.int32)
+    valid = np.array([[1, 1, 1], [0, 0, 1]], np.int32)
+    hl, now = 10, 40
+    sc = decay_scores((items, ts, valid), now, hl, n_items=8)
+    assert sc.shape == (2, 8) and sc.dtype == np.float64
+    # user 0: item 3 at ages 30 and 10, item 7 at age 20
+    np.testing.assert_allclose(sc[0, 3], 0.5 ** 3 + 0.5 ** 1)
+    np.testing.assert_allclose(sc[0, 7], 0.5 ** 2)
+    # invalid slots contribute nothing (item 0 stays 0 for user 1)
+    np.testing.assert_allclose(sc[1], np.eye(8)[5] * 1.0)
+    assert sc[0, [0, 1, 2, 4, 5, 6]].sum() == 0
+
+
+def test_decay_slate_is_argsort_of_cutoff_features():
+    gw = make_gateway(engine=tiny_engine())
+    gw.tick(T1)
+    users = [0, 5, 11]
+    tk = _serve(gw, users, T1, policy="decay")
+    feats = gw.injector.batch.lookup_at_cutoff(np.asarray(users), T1)
+    # scored over the engine's full vocab: score vectors keep the same
+    # shape on every serve path (items past N_ITEMS just never occur)
+    want = decay_scores(feats, T1, gw.injector.cfg.half_life,
+                        gw.engine.cfg.vocab_size)
+    for j, t in enumerate(tk):
+        tel = t.response.telemetry
+        assert tel.path == "decay" and tel.policy == "decay"
+        assert not tel.cache_hit
+        order = np.argsort(-want[j], kind="stable")
+        np.testing.assert_array_equal(t.response.slate,
+                                      order[:3].astype(np.int32))
+        np.testing.assert_array_equal(t.response.scores,
+                                      want[j].astype(np.float32))
+
+
+def test_decay_rows_pay_no_engine_and_leave_no_cache_entry():
+    gw = make_gateway(engine=tiny_engine())
+    gw.tick(T1)
+    pc0, len0 = gw.prefill_calls, len(gw.cache)
+    _serve(gw, [1, 2], T1, policy="decay")
+    assert gw.prefill_calls == pc0 and len(gw.cache) == len0
+    assert gw.stats().paths["decay"] == 2
+    # deterministic: a fresh gateway over the same stream serves
+    # bitwise-identical decay slates
+    gw2 = make_gateway(engine=tiny_engine())
+    gw2.tick(T1)
+    a = _serve(gw, [3], T1, policy="decay")[0].response
+    b = _serve(gw2, [3], T1, policy="decay")[0].response
+    np.testing.assert_array_equal(a.slate, b.slate)
+    np.testing.assert_array_equal(a.scores, b.scores)
+
+
+def test_mixed_policy_pane_carveout_is_inert():
+    """One pane mixing decay and engine rows: the engine rows must be
+    bitwise what an unmixed gateway serves (the decay carve-out cannot
+    perturb pane assembly), and vice versa."""
+    eng = tiny_engine()
+    gw = make_gateway(engine=eng, max_wait=8)
+    gw.tick(T1)
+    reqs = [(4, "inject"), (5, "decay"), (6, "batch"), (7, "decay")]
+    tk = [gw.submit(Request(user=u, now=T1, policy=p)) for u, p in reqs]
+    gw.flush(T1)
+    assert [t.response.telemetry.path for t in tk] == \
+        ["prefill", "decay", "prefill", "decay"]
+    ref = make_gateway(engine=eng)
+    ref.tick(T1)
+    rk = [_serve(ref, [u], T1, policy=p)[0] for u, p in reqs]
+    for got, want in zip(tk, rk):
+        np.testing.assert_array_equal(got.response.slate,
+                                      want.response.slate)
+        np.testing.assert_array_equal(got.response.scores,
+                                      want.response.scores)
+
+
+def test_decay_policy_registered_and_armed():
+    assert "decay" in POLICIES
+    # the historical two-arm hash mapping is untouched (experiment
+    # continuity); the three-arm experiment is a separate mapping
+    assert set(ARM_POLICIES) == {"control", "treatment"}
+    assert DECAY_ARM_POLICIES["decay"] == "decay"
+    arms = [request_arm(u, arms=DECAY_ARM_POLICIES) for u in range(500)]
+    assert set(arms) == {"control", "treatment", "decay"}
+    # deterministic per (user, salt) and unchanged for two-arm callers
+    assert arms == [request_arm(u, arms=DECAY_ARM_POLICIES)
+                    for u in range(500)]
+    assert [request_arm(u) for u in range(50)] == \
+        [request_arm(u, arms=ARM_POLICIES) for u in range(50)]
+
+
+def test_decay_gateway_policy_default_and_warm_noop():
+    """A gateway whose DEFAULT policy is decay: warm() must be a no-op
+    (nothing cacheable to pre-build) and every request takes the decay
+    path without an explicit per-request override."""
+    gw = make_gateway(policy="decay", engine=tiny_engine())
+    gw.warm(np.arange(8), T1)
+    assert len(gw.cache) == 0 and gw.prefill_calls == 0
+    tk = _serve(gw, [0, 1], T1)
+    assert all(t.response.telemetry.path == "decay" for t in tk)
+    assert gw.stats().ingest["appended"] >= 0  # counters surfaced

@@ -1,0 +1,325 @@
+"""Tiered sliding-window EventLog: compaction, demotion, eviction,
+bounded memory, the exactness contract against an unbounded-log oracle,
+the BackgroundCompactor worker, and cross-thread view consistency while
+compaction rewrites the hot tail.
+
+The oracle throughout is an UNTIERED EventLog fed the identical event
+stream: inside the retention window, with ``k <= segment_k`` and a query
+right edge that does not split a trimmed compacted window, every read
+must be bitwise identical.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.event_log import BackgroundCompactor, EventLog
+
+W = 100  # window used throughout
+
+
+def _pair(seed=0, n_users=16, n=400, t_hi=1000, **kw):
+    """(tiered, oracle) logs fed the same seeded stream."""
+    rng = np.random.RandomState(seed)
+    us = rng.randint(0, n_users, n)
+    its = rng.randint(0, 300, n)
+    tss = np.sort(rng.randint(0, t_hi, n))  # mostly-ordered arrivals
+    kw.setdefault("window", W)
+    kw.setdefault("segment_k", 64)
+    # default deep retention: nothing evicts, so exactness holds over
+    # the whole stream; eviction tests shrink it explicitly
+    kw.setdefault("retention_windows", 16)
+    log = EventLog(n_users, **kw)
+    oracle = EventLog(n_users)
+    log.extend(us, its, tss)
+    oracle.extend(us, its, tss)
+    return log, oracle, (us, its, tss)
+
+
+def _assert_reads_match(log, oracle, lo, hi, k, n_users=16):
+    users = np.arange(n_users)
+    got = log.materialize(users, lo, hi, k)
+    want = oracle.materialize(users, lo, hi, k)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_untiered_log_never_compacts():
+    log = EventLog(8)
+    log.append(0, 1, 50)
+    assert not log.compaction_due(10_000)
+    assert log.compact(10_000) == {}
+    st = log.ingest_stats()
+    assert st["window"] == 0 and st["compactions"] == 0
+    assert log.n_events == len(log) == 1
+
+
+def test_compact_is_oracle_exact_in_retention():
+    log, oracle, _ = _pair(seed=1)
+    assert log.compaction_due(1000)
+    out = log.compact(1000)
+    assert out["horizon"] == 1000 and log.counters["compactions"] == 1
+    assert not log.compaction_due(1000)  # same boundary: no-op
+    assert log.compact(1000) == {}
+    # every window-aligned in-retention query, plus above-horizon ones
+    for lo, hi in [(0, 1000), (200, 600), (0, W), (900, 1000),
+                   (300, 5000), (1000, 5000)]:
+        _assert_reads_match(log, oracle, lo, hi, 24)
+    # positions survive: delta scans anchored mid-stream stay equal
+    for start in (0, 100, 399):
+        np.testing.assert_array_equal(
+            log.users_with_events(0, 1000, start=start),
+            oracle.users_with_events(0, 1000, start=start))
+    assert log.n_events == oracle.n_events == 400
+
+
+def test_late_event_demoted_into_segment():
+    log, oracle, _ = _pair(seed=2)
+    log.compact(1000)
+    # ts below the horizon but inside retention: demoted, still served
+    log.append(3, 42, 150)
+    oracle.append(3, 42, 150)
+    assert log.counters["demoted"] == 1
+    _assert_reads_match(log, oracle, 100, 200, 8)
+    _assert_reads_match(log, oracle, 0, 1000, 24)
+    # the demoted event is position-anchored for late-arrival scans
+    assert 3 in log.users_with_events(0, 1000, start=400)
+
+
+def test_late_event_past_retention_dropped_and_counted():
+    log, _, _ = _pair(seed=3, retention_windows=2)
+    log.compact(1000)  # floor = 800
+    n0 = log.n_events
+    log.append(5, 7, 100)          # far below the floor
+    assert log.counters["dropped_late"] == 1
+    assert log.n_events == n0 + 1  # position consumed, event not retained
+    assert 5 not in log.users_with_events(95, 105)
+
+
+def test_eviction_past_retention_floor():
+    log, oracle, _ = _pair(seed=4, retention_windows=3)
+    log.compact(1000)  # keeps [700, 1000) warm + hot tail
+    st = log.ingest_stats()
+    assert st["evicted"] > 0
+    assert log.min_ts() >= 700
+    # in-retention reads still oracle-exact
+    for lo, hi in [(700, 1000), (800, 900), (900, 2000)]:
+        _assert_reads_match(log, oracle, lo, hi, 24)
+    # a second boundary evicts the oldest surviving window
+    log.extend([1], [2], [1050])
+    oracle.extend([1], [2], [1050])
+    log.compact(1100)
+    assert log.min_ts() >= 800
+    _assert_reads_match(log, oracle, 800, 1100, 24)
+
+
+def test_conservation_invariant():
+    log, _, _ = _pair(seed=5, retention_windows=2, segment_k=4)
+    log.compact(1000)
+    log.append(0, 1, 150)   # dropped (below floor 800)
+    log.append(0, 1, 850)   # demoted
+    log.extend([1, 2], [3, 4], [1001, 1002])
+    log.compact(1100)
+    st = log.ingest_stats()
+    assert st["appended"] == (st["events_hot"] + st["events_warm"]
+                             + st["trimmed"] + st["dropped_late"]
+                             + st["evicted"])
+
+
+def test_hot_budget_bounds_tail_growth():
+    log = EventLog(8, capacity=16, window=W, hot_budget=64)
+    for i in range(200):
+        log.append(i % 8, i, 900 + i % W)  # one window, never compacts
+    st = log.ingest_stats()
+    # allocation stays at need, not doubling headroom past the budget
+    assert st["bytes_hot"] <= 200 * (8 + 4 + 8 + 8)
+    assert st["hot_overflow"] >= 1
+    assert len(log) == 200  # in-window events are never refused
+    log2 = EventLog(8, capacity=16, window=W, hot_budget=64)
+    for i in range(60):
+        log2.append(i % 8, i, 900 + i % W)
+    assert log2.ingest_stats()["hot_overflow"] == 0
+
+
+def test_trim_keeps_freshest_k_and_records_superset():
+    log = EventLog(4, window=W, segment_k=3)
+    oracle = EventLog(4)
+    # user 0: 6 events in window [0, 100) -> 3 trimmed; user 1: 2 events
+    rows = [(0, i, 10 * i) for i in range(6)] + [(1, 7, 15), (1, 8, 85)]
+    for u, i, t in rows:
+        log.append(u, i, t)
+        oracle.append(u, i, t)
+    log.compact(100)
+    assert log.counters["trimmed"] == 3
+    # k <= segment_k with aligned right edge: still oracle-exact
+    _assert_reads_match(log, oracle, 0, 100, 3, n_users=4)
+    _assert_reads_match(log, oracle, 0, 200, 2, n_users=4)
+    # a right edge splitting the trimmed window: user scans degrade to a
+    # recorded superset (never a miss) -- user 0 must be flagged
+    assert 0 in log.users_with_events(0, 25)
+    # exact-presence side: user 1's kept rows answer exactly
+    assert 1 in log.users_with_events(80, 90)
+
+
+def test_events_since_resurfaces_demoted_events_in_order():
+    log = EventLog(8, window=W)
+    for p, (u, t) in enumerate([(0, 10), (1, 120), (2, 130)]):
+        log.append(u, p, t)
+    log.compact(100)           # event 0 compacted into [0, 100)
+    log.append(3, 9, 50)       # late: demoted into the same segment
+    v = log.view()
+    us, its, tss = v.events_since(0)
+    assert us.tolist() == [0, 1, 2, 3]       # append order, merged back
+    assert tss.tolist() == [10, 120, 130, 50]
+    us2, _, _ = v.events_since(3)
+    assert us2.tolist() == [3]
+    assert v.n_events == 4
+
+
+def test_min_ts_and_user_events_span_tiers():
+    log, oracle, (us, its, tss) = _pair(seed=6)
+    log.compact(1000)
+    assert log.min_ts() == oracle.min_ts()
+    for u in (0, 3, 15):
+        assert log.user_events(u) == oracle.user_events(u)
+
+
+def test_background_compactor_matches_sync():
+    log, _, stream = _pair(seed=7, retention_windows=3, segment_k=8)
+    sync_log = EventLog(16, window=W, retention_windows=3, segment_k=8)
+    sync_log.extend(*stream)
+    comp = BackgroundCompactor(log)
+    assert comp.start(1000)
+    assert not comp.start(1000)    # one in flight
+    comp.join()
+    out = comp.poll()
+    want = sync_log.compact(1000)
+    assert out == want
+    assert comp.poll() is None     # drained
+    assert log.ingest_stats() == sync_log.ingest_stats()
+    _assert_reads_match(log, sync_log, 700, 1100, 24)
+
+
+def test_background_compactor_buffers_late_appends_during_build():
+    log, oracle, _ = _pair(seed=8)
+    log.compact(1000)
+    oracle.compact = lambda *a, **k: {}  # oracle stays unbounded
+    built = threading.Event()
+    release = threading.Event()
+
+    def hook(phase):
+        if phase == "built":
+            built.set()
+            release.wait(5)
+
+    log.extend([0], [1], [1050])
+    oracle.extend([0], [1], [1050])
+    comp = BackgroundCompactor(log)
+    assert comp.start(1100, step_hook=hook)
+    assert built.wait(5)
+    # late event lands while the worker owns the build: parked, then
+    # routed into its segment at install -- never lost, never racing
+    log.append(2, 9, 950)
+    oracle.append(2, 9, 950)
+    assert log._compacting and len(log._late_buffer) == 1
+    release.set()
+    comp.join()
+    comp.poll()
+    assert log.counters["demoted"] == 1 and not log._late_buffer
+    _assert_reads_match(log, oracle, 900, 1100, 24)
+
+
+def test_background_compactor_error_is_sticky_and_aborts():
+    log, _, _ = _pair(seed=9)
+
+    def hook(phase):
+        raise RuntimeError("boom")
+
+    comp = BackgroundCompactor(log)
+    assert comp.start(1000, step_hook=hook)
+    comp.join()
+    with pytest.raises(RuntimeError, match="background compaction failed"):
+        comp.poll()
+    assert not log._compacting          # aborted cleanly
+    assert log.compact(1000) != {}      # retry succeeds
+
+
+def test_keep_from_pins_unconsumed_suffix():
+    log = EventLog(8, window=W, retention_windows=1)
+    for i in range(10):
+        log.append(i % 8, i, 10 * i)    # ts 0..90, one window
+    # a trainer that has consumed through position 4 pins 4..9 hot
+    log.compact(1000, keep_from=4)
+    st = log.ingest_stats()
+    assert st["events_hot"] == 6 and st["evicted"] == 4
+    v = log.view()
+    us, _, _ = v.events_since(4)
+    assert len(us) == 6                 # gapless past the cursor
+
+
+# ----------------------------------------------------------------------
+# cross-thread: views stay oracle-exact while compaction rewrites the
+# tail (the PR 8 step-barrier pattern, pointed at compaction)
+# ----------------------------------------------------------------------
+
+def test_view_frozen_across_compaction_phases():
+    log, oracle, _ = _pair(seed=10)
+    v = log.view()
+    want = [np.copy(a) for a in v.materialize(np.arange(16), 0, 1000, 24)]
+
+    def check(phase):
+        got = log.view().materialize(np.arange(16), 0, 1000, 24)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+    log.compact(1000, step_hook=check)  # barriers: captured/built/installed
+    # the pre-compaction view itself is frozen -- still bitwise equal
+    got = v.materialize(np.arange(16), 0, 1000, 24)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_concurrent_readers_during_live_compaction():
+    """Reader threads grab views and materialize while the owner thread
+    appends and compacts; every view must match an untiered oracle built
+    from the same stream prefix (``view.n_events`` anchors the prefix)."""
+    n_users = 8
+    rng = np.random.RandomState(11)
+    stream = [(int(rng.randint(n_users)), int(rng.randint(300)), 5 * t)
+              for t in range(600)]
+    log = EventLog(n_users, window=W, retention_windows=64, segment_k=64)
+    oracle = EventLog(n_users)
+    oracle.extend(*map(np.asarray, zip(*stream)))
+    errors = []
+    stop = threading.Event()
+
+    def reader():
+        users = np.arange(n_users)
+        try:
+            while not stop.is_set():
+                v = log.view()
+                n = v.n_events
+                got = v.materialize(users, 0, 5 * n, 24)
+                ou, oi, ot = (np.asarray(c[:n]) for c in zip(*stream))
+                ref = EventLog(n_users)
+                if n:
+                    ref.extend(ou, oi, ot)
+                want = ref.materialize(users, 0, 5 * n, 24)
+                for g, w in zip(got, want):
+                    np.testing.assert_array_equal(g, w)
+        except BaseException as e:  # surfaces on the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for i, (u, it, ts) in enumerate(stream):
+        log.append(u, it, ts)
+        if i and i % 150 == 0:
+            log.compact(ts)
+    log.compact(3000)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[0]
+    _assert_reads_match(log, oracle, 0, 3000, 24, n_users=n_users)

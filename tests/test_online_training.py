@@ -471,11 +471,15 @@ def test_delta_rewarm_pending_overflow_drops_to_prefill():
     np.testing.assert_array_equal(_slates(tk)[1], _slates(ck)[1])
 
 
-def test_delta_rewarm_config_requires_host_lru():
-    with pytest.raises(ValueError):
-        ServerConfig(delta_rewarm=True, pool_slots=16)
+def test_delta_rewarm_config_accepts_both_backends():
+    # PR 10 extended O(delta) rewarm to the paged pool: the old
+    # host-LRU-only rejection is gone
+    cfg = ServerConfig(delta_rewarm=True, pool_slots=16)
+    assert cfg.delta_rewarm and cfg.pool_slots == 16
     with pytest.raises(ValueError):
         ServerConfig(patch_policy="evict-all")
+    with pytest.raises(ValueError):
+        ServerConfig(log_compaction="eager")
 
 
 def test_stats_surface_new_fields():
@@ -484,3 +488,106 @@ def test_stats_surface_new_fields():
     assert d["model_version"] == 0 and d["patches_applied"] == 0
     assert d["patch_install_max_ms"] == 0.0
     assert d["rollover"]["delta_rewarms"] == 0
+
+
+def test_delta_rewarm_pool_backend_bitwise():
+    """Satellite: the paged device pool takes the same O(delta) deferred
+    re-warm as the host LRU — identical delta_rewarms count, zero
+    prefills paid at the roll, and slates/scores bitwise equal to the
+    host-LRU gateway on the same stream."""
+    evts = _short_history_events()
+    users = [0, 1, 2, 3, 4, 5]
+    changed = [0, 1, 2]
+    t1 = 5 * DAY + 100
+    t2 = 6 * DAY + 100
+    eng = tiny_engine()
+
+    def _feed(g):
+        for u in changed:
+            g.observe((u, 50 + u, 5 * DAY + 600 + u))
+            g.observe((u, 80 + u, 5 * DAY + 700 + u))
+        for u in changed:
+            g.observe((u, 120 + u, 6 * DAY + 50 + u))
+
+    def _run(**kw):
+        gw = make_gateway(engine=eng, events=evts, delta_rewarm=True,
+                          rewarm_budget=8, **kw)
+        _serve(gw, users, t1)
+        _feed(gw)
+        pc0 = gw.prefill_calls
+        gw.tick(t1 + DAY)
+        assert gw.stats().rollover.delta_rewarms == len(changed)
+        assert gw.prefill_calls == pc0
+        tk = _serve(gw, users, t2)
+        assert gw.prefill_calls == pc0
+        assert all(t.response.telemetry.cache_hit for t in tk)
+        return _slates(tk)
+
+    ps, psc = _run(pool_slots=16)
+    hs, hsc = _run()
+    np.testing.assert_array_equal(ps, hs)
+    np.testing.assert_array_equal(psc, hsc)
+
+
+def test_pool_pending_dies_with_entry():
+    """Pending inject tokens are host metadata keyed like the pool's
+    entries: eviction, drop, and re-admission must all clear them so a
+    recycled slot never inherits another generation's pending stream."""
+    from repro.serving.pool import PagedStateCache
+
+    class _StubPool:               # slot-table ops never touch the device
+        n_slots = 2
+        slot_nbytes = 128
+        data_shards = 1
+
+    pc = PagedStateCache(_StubPool())
+    pc.admit(0, 0, pinned=set())
+    pc.set_pending(0, 0, [(1, 2)])
+    assert pc.has_entry(0, 0) and pc.get_pending(0, 0) == [(1, 2)]
+    pc.admit(1, 0, pinned=set())
+    pc.admit(2, 0, pinned=set())   # slot pressure: evicts user 0 (LRU)
+    assert not pc.has_entry(0, 0) and pc.get_pending(0, 0) is None
+    pc.admit(0, 0, pinned=set())   # re-admitted into a recycled slot
+    assert pc.get_pending(0, 0) is None
+    pc.set_pending(0, 0, [(3, 4)])
+    pc.admit(0, 0, pinned=set())   # re-admission supersedes the deferral
+    assert pc.get_pending(0, 0) is None
+    pc.set_pending(0, 0, [(3, 4)])
+    pc.drop(0, 0)
+    assert pc.get_pending(0, 0) is None
+    with pytest.raises(KeyError):
+        pc.set_pending(9, 0, [(5, 6)])
+    # rekey carries pending to the new generation key
+    pc.set_pending(2, 0, [(7, 8)])
+    pc.rekey_entry(2, 0, 1)
+    assert pc.get_pending(2, 0) is None
+    assert pc.get_pending(2, 1) == [(7, 8)]
+    # generation-wide purge clears the sidecar with the table
+    pc.invalidate_except(0)
+    assert pc.get_pending(2, 1) is None and not pc._pending
+
+
+def test_trainer_missed_events_accounting():
+    """Compaction with ``keep_from`` pinned at the trainer's cursor never
+    loses unconsumed events (missed_events stays 0); compacting WITHOUT
+    the pin under tight retention evicts unconsumed rows, and the trainer
+    counts exactly the hole."""
+    log = EventLog(8, window=100, retention_windows=1)
+    tr = OnlineTrainer(tiny_model_config(), _tiny_params(), log,
+                       cfg=OnlineTrainerConfig(batch_size=8, seq_len=16,
+                                               min_new_events=8,
+                                               window=10_000),
+                       train_cfg=_fast_tcfg())
+    for i in range(16):
+        log.append(i % 8, i % 8, 10 * i)
+    log.compact(1000, keep_from=tr.cursor)      # pins everything
+    assert log.ingest_stats()["evicted"] == 0
+    tr.step()
+    assert tr.missed_events == 0 and tr.cursor == 16
+    for i in range(16):
+        log.append(i % 8, i % 8, 1000 + 10 * i)
+    log.compact(2400)  # floor 2300: every retained event evicts (the
+    assert log.ingest_stats()["evicted"] == 32  # pinned 16 + the new 16)
+    tr.step()
+    # ...but only the 16 the trainer had not consumed count as missed
+    assert tr.missed_events == 16 and tr.cursor == 32

@@ -539,7 +539,8 @@ def test_telemetry_paths_and_generation():
     gw.flush(now + 10)
     assert all(t.response.telemetry.path == "inject" for t in t3)
     st = gw.stats()
-    assert st["paths"] == {"prefill": 4, "cached": 4, "inject": 4}
+    assert st["paths"] == {"prefill": 4, "cached": 4, "inject": 4,
+                           "decay": 0}
     assert st["queue_delay"]["window"] == 12
 
 

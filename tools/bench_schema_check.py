@@ -112,6 +112,29 @@ SCHEMAS = {
                       "online_post_drift_loss": NUM,
                       "frozen_post_drift_loss": NUM,
                       "adaptation_ratio": NUM}}},
+    "ingest": {
+        "suite": str, "smoke": bool,
+        "config": {"window": int, "retention_windows": int,
+                   "segment_k": int, "hot_budget": int,
+                   "events_per_window": int, "rollovers": int},
+        "results": {
+            "bounded": {
+                "rollovers": int, "events": int,
+                "bytes_total_per_rollover": [int],
+                "unbounded_bytes": int,
+                "bytes_ratio_vs_unbounded": NUM,
+                "ingest_rate_events_per_s": NUM,
+                "steady_state_bounded": bool, "counters": dict},
+            "oracle": {"events": int, "late_events": int, "demoted": int,
+                       "compactions": int, "queries": int,
+                       "oracle_bitwise": bool},
+            "churn_compact": {
+                "slo_pass": bool, "deterministic": bool,
+                "decay_requests": int, "compactions": int,
+                "trace_fingerprint": str, "slate_fingerprints": [str],
+                "metrics": dict, "ingest": dict,
+                "gates": [{"gate": str, "budget": None, "actual": None,
+                           "pass": bool}]}}},
     "scenarios": {
         "suite": str, "smoke": bool,
         "config": {"scenarios": [str]},
@@ -180,6 +203,43 @@ def semantic_checks(doc, path):
         if drift.get("adaptation_ratio", 0.0) < 1.0:
             errs.append(f"{path}.results.drift: online post-drift loss "
                         f"not below the frozen model's")
+    if doc.get("suite") == "ingest":
+        res = doc.get("results", {})
+        bnd = res.get("bounded", {})
+        if bnd.get("steady_state_bounded") is not True:
+            errs.append(f"{path}.results.bounded: sustained ingest not "
+                        f"certified memory-bounded")
+        samples = bnd.get("bytes_total_per_rollover", [])
+        ret = bnd.get("counters", {}).get("retention_windows", 0)
+        tail = samples[ret:]
+        # re-derive the in-suite gate from the recorded series: the
+        # artifact cannot claim boundedness its own numbers contradict
+        if len(tail) < 3:
+            errs.append(f"{path}.results.bounded: fewer than 3 "
+                        f"steady-state rollovers recorded")
+        elif all(b > a for a, b in zip(tail, tail[1:])):
+            errs.append(f"{path}.results.bounded: recorded footprint "
+                        f"grew monotonically in steady state: {tail}")
+        if res.get("oracle", {}).get("oracle_bitwise") is not True:
+            errs.append(f"{path}.results.oracle: tiered log not certified "
+                        f"bitwise equal to the unbounded oracle")
+        cc = res.get("churn_compact", {})
+        if cc.get("slo_pass") is not True:
+            errs.append(f"{path}.results.churn_compact: scenario failed "
+                        f"its SLO contract with compaction live")
+        if bool(cc.get("slo_pass")) != all(g.get("pass")
+                                           for g in cc.get("gates", [])):
+            errs.append(f"{path}.results.churn_compact: slo_pass "
+                        f"disagrees with its gate list")
+        if cc.get("deterministic") is not True:
+            errs.append(f"{path}.results.churn_compact: replay did not "
+                        f"reproduce identical slates")
+        if cc.get("compactions", 0) < 3:
+            errs.append(f"{path}.results.churn_compact: fewer than 3 "
+                        f"compactions ran during the trace")
+        if cc.get("decay_requests", 0) < 1:
+            errs.append(f"{path}.results.churn_compact: no decay-arm "
+                        f"rows served in the mixed panes")
     if doc.get("suite") == "scenarios":
         det = doc.get("determinism", {})
         if det.get("reproducible") is not True:
